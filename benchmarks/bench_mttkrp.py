@@ -1,0 +1,44 @@
+"""Paper Fig. 5b: MTTKRP — all-at-once vs the two pairwise contraction
+orders, across density (fixed nnz), averaged over the three output modes."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.sparse_tensor import SparseTensor
+from repro.sparse import ops as sops
+
+MEM_BUDGET = 2 ** 28
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(2)
+    nnz = 20_000 if quick else 100_000
+    r = 32
+    densities = [1e-2, 1e-4] if quick else [1e-2, 1e-3, 1e-4, 1e-5]
+    for dens in densities:
+        dim = max(8, int(round((nnz / dens) ** (1 / 3))))
+        st = SparseTensor.random(key, (dim,) * 3, nnz)
+        ks = jax.random.split(key, 3)
+        factors = [jax.random.normal(k, (dim, r)) for k in ks]
+
+        def avg(fn):
+            tot = 0.0
+            for mode in range(3):
+                fac = list(factors)
+                fac[mode] = None
+                f = jax.jit(lambda s, a, b, c, m=mode: fn(
+                    s, [x if i != m else None
+                        for i, x in enumerate([a, b, c])], m))
+                tot += time_fn(f, st, *factors)
+            return tot / 3
+
+        emit(f"fig5b_mttkrp_allatonce_d{dens:g}", avg(sops.mttkrp),
+             f"dim={dim}")
+        emit(f"fig5b_mttkrp_pairwise_Tfirst_d{dens:g}",
+             avg(sops.mttkrp_pairwise_t_first), f"dim={dim}")
+        if 4 * dim * dim * r <= MEM_BUDGET:
+            emit(f"fig5b_mttkrp_pairwise_KRfirst_d{dens:g}",
+                 avg(sops.mttkrp_pairwise_kr_first), f"dim={dim}")
+        else:
+            emit(f"fig5b_mttkrp_pairwise_KRfirst_d{dens:g}", -1, "OOM-budget")

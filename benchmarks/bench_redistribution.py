@@ -1,0 +1,46 @@
+"""Paper Fig. 4: transpose/reshape throughput for sparse and dense tensors.
+
+Derived column = achieved bandwidth in MB/s (paper's metric: bytes needed to
+store the tensor / execution time; 16 B per sparse nonzero, 8 B per dense
+value)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.sparse_tensor import SparseTensor
+from repro.sparse.redistribute import reshape_distributed, transpose_distributed
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    nnz = 50_000 if quick else 400_000
+    shape3 = (512, 512, 512)
+    st = SparseTensor.random(key, shape3, nnz)
+    sp_bytes = 16 * nnz
+
+    f_t = jax.jit(lambda s: transpose_distributed(s, (2, 0, 1)).values)
+    us = time_fn(f_t, st)
+    emit("fig4_sparse_transpose_o3", us, f"{sp_bytes / us:.1f}MBps")
+
+    f_r = jax.jit(lambda s: reshape_distributed(
+        s, (512 * 512, 512)).values)
+    us = time_fn(f_r, st)
+    emit("fig4_sparse_reshape_o3", us, f"{sp_bytes / us:.1f}MBps")
+
+    st4 = SparseTensor.random(key, (128, 128, 128, 128), nnz)
+    f_t4 = jax.jit(lambda s: transpose_distributed(s, (3, 1, 0, 2)).values)
+    us = time_fn(f_t4, st4)
+    emit("fig4_sparse_transpose_o4", us, f"{sp_bytes / us:.1f}MBps")
+
+    n = 128 if quick else 224
+    dense = jax.random.normal(key, (n, n, n))
+    d_bytes = 8 * n ** 3
+    f_dt = jax.jit(lambda x: jnp.transpose(x, (2, 0, 1)))
+    us = time_fn(f_dt, dense)
+    emit("fig4_dense_transpose_o3", us, f"{d_bytes / us:.1f}MBps")
+
+    f_dr = jax.jit(lambda x: x.reshape(n * n, n) + 0.0)
+    us = time_fn(f_dr, dense)
+    emit("fig4_dense_reshape_o3", us, f"{d_bytes / us:.1f}MBps")

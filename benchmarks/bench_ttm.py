@@ -1,0 +1,42 @@
+"""Paper Fig. 5a: TTM variants across density at fixed nonzero count.
+
+Variants: fully dense, sparse-input/dense-output, hypersparse (sparse
+output). Derived = density; the dense variants stop being reported where
+their memory would exceed the budget (the paper's OOM points)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.sparse_tensor import SparseTensor
+from repro.sparse import ops as sops
+
+MEM_BUDGET = 2 ** 28  # 256 MB proxy for the per-node budget
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(1)
+    nnz = 20_000 if quick else 100_000
+    r = 32
+    densities = [1e-2, 1e-3, 1e-4] if quick else [1e-2, 1e-3, 1e-4, 1e-5]
+    for dens in densities:
+        dim = max(8, int(round((nnz / dens) ** (1 / 3))))
+        shape = (dim, dim, dim)
+        st = SparseTensor.random(key, shape, nnz)
+        w = jax.random.normal(key, (dim, r))
+        if 8 * dim ** 3 <= MEM_BUDGET:
+            f = jax.jit(lambda d, w: sops.ttm_fully_dense(d, w, 2))
+            us = time_fn(f, st.todense(), w)
+            emit(f"fig5a_ttm_dense_d{dens:g}", us, f"dim={dim}")
+        else:
+            emit(f"fig5a_ttm_dense_d{dens:g}", -1, "OOM-budget")
+        if 4 * dim * dim * r <= MEM_BUDGET:
+            f = jax.jit(lambda s, w: sops.ttm_dense_output(s, w, 2))
+            us = time_fn(f, st, w)
+            emit(f"fig5a_ttm_sparse_denseout_d{dens:g}", us, f"dim={dim}")
+        else:
+            emit(f"fig5a_ttm_sparse_denseout_d{dens:g}", -1, "OOM-budget")
+        f = jax.jit(lambda s, w: sops.ttm_hypersparse(s, w, 2).values)
+        us = time_fn(f, st, w)
+        emit(f"fig5a_ttm_hypersparse_d{dens:g}", us, f"dim={dim}")

@@ -1,0 +1,39 @@
+"""Paper Fig. 6: TTTP all-at-once vs pairwise contraction, R=1 and R=60,
+across density. Also exercises the H-sliced schedule and the Pallas kernel
+path (interpret mode on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.sparse_tensor import SparseTensor
+from repro.core import tttp as T
+from repro.kernels import ops as kops
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(3)
+    nnz = 20_000 if quick else 100_000
+    densities = [1e-2, 1e-4] if quick else [1e-2, 1e-3, 1e-4, 1e-5]
+    for r in (1, 60):
+        for dens in densities:
+            dim = max(8, int(round((nnz / dens) ** (1 / 3))))
+            st = SparseTensor.random(key, (dim,) * 3, nnz)
+            ks = jax.random.split(key, 3)
+            factors = [jax.random.normal(k, (dim, r)) for k in ks]
+
+            f_all = jax.jit(lambda s, a, b, c: T.tttp(s, [a, b, c]).values)
+            us = time_fn(f_all, st, *factors)
+            emit(f"fig6_tttp_allatonce_r{r}_d{dens:g}", us, f"dim={dim}")
+
+            f_pw = jax.jit(lambda s, a, b, c:
+                           T.tttp_pairwise(s, [a, b, c]).values)
+            us_pw = time_fn(f_pw, st, *factors)
+            emit(f"fig6_tttp_pairwise_r{r}_d{dens:g}", us_pw,
+                 f"slowdown={us_pw / max(us, 1):.2f}x")
+
+            if r == 60:
+                f_sl = jax.jit(lambda s, a, b, c:
+                               T.tttp_sliced(s, [a, b, c], 4).values)
+                us_sl = time_fn(f_sl, st, *factors)
+                emit(f"fig6_tttp_sliced_h4_r{r}_d{dens:g}", us_sl, "")

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6]``
+prints ``name,us_per_call,derived`` CSV lines (paper mapping in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_ccd_variants, bench_completion, bench_gcp,
+                        bench_mttkrp, bench_redistribution, bench_ttm,
+                        bench_tttp)
+
+MODULES = [
+    ("fig4_redistribution", bench_redistribution),
+    ("fig5a_ttm", bench_ttm),
+    ("fig5b_mttkrp", bench_mttkrp),
+    ("fig6_tttp", bench_tttp),
+    ("fig7_completion", bench_completion),
+    ("sec5.5_ccd_variants", bench_ccd_variants),
+    ("gcp_generalized_losses", bench_gcp),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"# -- {name} --", flush=True)
+        try:
+            mod.run(quick=args.quick)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Generalized-loss completion (the assigned title's extension): fit a count
+tensor under Poisson loss with Adam — same sparse kernels, new objective.
+
+    PYTHONPATH=src python examples/poisson_completion.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as L
+from repro.core.completion import gcp_adam_init, gcp_step
+from repro.core.completion.gcp import gcp_loss
+from repro.data import synthetic
+
+key = jax.random.PRNGKey(0)
+base = synthetic.function_tensor(key, (60, 50, 40), nnz=20_000)
+counts = base.with_values(jax.random.poisson(
+    key, 5.0 * base.values).astype(jnp.float32))
+
+R = 8
+fs = [jnp.abs(jax.random.normal(jax.random.fold_in(key, d), (s, R))) * 0.3
+      + 0.05 for d, s in enumerate(counts.shape)]
+ad = gcp_adam_init(fs)
+step = jax.jit(lambda s, f, a: gcp_step(s, list(f), L.poisson, 1e-7, 5e-3, a))
+for it in range(120):
+    fs, ad = step(counts, tuple(fs), ad)
+    if it % 20 == 0:
+        print(f"iter {it:3d} poisson loss "
+              f"{float(gcp_loss(counts, list(fs), L.poisson, 1e-7)):.1f}")
+print("final loss:", float(gcp_loss(counts, list(fs), L.poisson, 1e-7)))

@@ -1,0 +1,12 @@
+"""Train a reduced LM architecture end-to-end (any of the 10 assigned archs):
+
+    PYTHONPATH=src python examples/train_lm_smoke.py [arch]
+"""
+import subprocess, sys, os
+arch = sys.argv[1] if len(sys.argv) > 1 else "gemma2-2b"
+root = os.path.join(os.path.dirname(__file__), "..")
+subprocess.run([sys.executable, "-m", "repro.launch.train",
+                "--arch", arch, "--smoke", "--steps", "30",
+                "--batch", "4", "--seq", "64",
+                "--ckpt-dir", "/tmp/repro_ex_train"],
+               cwd=root, env={**os.environ, "PYTHONPATH": "src"}, check=True)

@@ -1,0 +1,4 @@
+"""repro: distributed-memory tensor completion with new sparse tensor kernels,
+in JAX — plus the assigned LM-architecture zoo, launcher, and dry-run stack."""
+
+__version__ = "1.0.0"

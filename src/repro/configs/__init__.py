@@ -1,0 +1,5 @@
+from repro.configs import base
+from repro.configs.base import ArchConfig, ShapeCell, SHAPES, get, get_smoke, names, cells_for
+
+__all__ = ["base", "ArchConfig", "ShapeCell", "SHAPES", "get", "get_smoke",
+           "names", "cells_for"]

@@ -1,0 +1,157 @@
+"""Architecture config system: one dataclass covers the 10 assigned LM
+architectures; per-arch modules instantiate it with the exact public-
+literature values and register it under its ``--arch`` id.
+
+Each arch also provides a ``smoke()`` reduction (same family, tiny dims)
+used by per-arch CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One block within a repeating layer group."""
+    kind: str            # "attn" | "mamba2" | "mlstm" | "slstm"
+    attn_scope: str = "global"   # "global" | "local" | "chunked"
+    shared: bool = False         # zamba2-style shared weights
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+
+    # layer-group structure: `group` repeats n_layers/len(group) times
+    group: Tuple[BlockSpec, ...] = (BlockSpec("attn"),)
+
+    # attention
+    attn_kind: str = "gqa"       # gqa | mla
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    local_window: int = 4096
+    chunk_size: int = 8192
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+
+    # MLA (minicpm3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # ffn / moe
+    ffn_kind: str = "swiglu"     # swiglu | geglu | none
+    n_experts: int = 0           # 0 = dense FFN
+    top_k: int = 1
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+
+    # ssm
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    xlstm_chunk: int = 0   # 0 = recurrent mLSTM; >0 = chunkwise-parallel
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+
+    # modality frontend stub
+    frontend: Optional[str] = None    # None | "patch" | "frames"
+    num_patches: int = 256
+
+    # norms / misc
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    seq_sharded_residual: int = 0  # 1 = Megatron-SP style x sharded over tp
+
+    # which shape cells are lowered; long_500k handled per DESIGN.md §5
+    supports_long_context: bool = False
+
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim_()
+
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def group_size(self) -> int:
+        return len(self.group)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_size == 0, \
+            f"{self.name}: n_layers {self.n_layers} % group {self.group_size}"
+        return self.n_layers // self.group_size
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+_REGISTRY: Dict[str, "ArchEntry"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    config: ArchConfig
+    smoke: ArchConfig
+
+
+def register(config: ArchConfig, smoke: ArchConfig):
+    _REGISTRY[config.name] = ArchEntry(config, smoke)
+
+
+def get(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name].config
+
+
+def get_smoke(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name].smoke
+
+
+def names():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def cells_for(name: str) -> Sequence[str]:
+    """Which shape cells are lowered for this arch (DESIGN.md §5 skips)."""
+    cfg = get(name)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        cells.append("long_500k")
+    return cells
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (gemma2_2b, gemma2_27b, llama4_scout,  # noqa
+                               minicpm3_4b, phi35_moe, phi3_vision,
+                               qwen2_72b, whisper_base, xlstm_125m,
+                               zamba2_2p7b)

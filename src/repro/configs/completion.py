@@ -1,0 +1,45 @@
+"""The paper's own completion workloads as configs (Fig. 7a/7b + dry-run).
+
+``function_10b`` is the paper's flagship run: 10^10 observed entries at 1e-5
+density (⇒ dims 10^5 each), rank 10, on 256 nodes. ``netflix`` is the real
+dataset's shape with rank 100. Both are exercised full-size only through the
+dry-run (ShapeDtypeStructs); benchmarks scale them down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletionConfig:
+    name: str
+    shape: Tuple[int, ...]
+    nnz: int
+    rank: int
+    lam: float = 1e-5
+    algorithm: str = "als"      # als | ccd | sgd | gcp
+    loss: str = "quadratic"
+    cg_tol: float = 1e-4
+    cg_iters: int = 20
+    sgd_lr: float = 3e-5
+    sgd_sample: float = 3e-3    # sample rate (fraction of nnz)
+    h_slices: int = 1           # TTTP H-slicing factor
+
+
+FUNCTION_10B = CompletionConfig(
+    name="function_10b",
+    shape=(100_000, 100_000, 100_000),
+    nnz=10_000_000_000,
+    rank=10, lam=1e-5,
+)
+
+NETFLIX = CompletionConfig(
+    name="netflix",
+    shape=(480_189, 17_770, 2_182),
+    nnz=100_477_727,
+    rank=100, lam=1e-2,
+    sgd_lr=3e-5, sgd_sample=3e-3,
+)
+
+COMPLETION_CONFIGS = {c.name: c for c in (FUNCTION_10B, NETFLIX)}

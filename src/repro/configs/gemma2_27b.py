@@ -1,0 +1,28 @@
+"""gemma2-27b [arXiv:2408.00118; hf].
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000; same alternating
+local/global + softcap structure as gemma2-2b. long_500k runs."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="gemma2-27b", family="dense",
+    n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16, d_ff=36_864,
+    vocab=256_000, head_dim=128,
+    group=(BlockSpec("attn", attn_scope="local"),
+           BlockSpec("attn", attn_scope="global")),
+    local_window=4096, attn_softcap=50.0, final_softcap=30.0,
+    ffn_kind="geglu", tie_embeddings=True,
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="gemma2-27b-smoke", family="dense",
+    n_layers=2, d_model=96, n_heads=6, n_kv_heads=3, d_ff=128,
+    vocab=512, head_dim=16,
+    group=(BlockSpec("attn", attn_scope="local"),
+           BlockSpec("attn", attn_scope="global")),
+    local_window=16, attn_softcap=50.0, final_softcap=30.0,
+    ffn_kind="geglu", tie_embeddings=True,
+)
+
+register(CONFIG, SMOKE)

@@ -1,0 +1,30 @@
+"""gemma2-2b [arXiv:2408.00118; hf].
+
+26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000; alternating
+local(4096)/global attention, attn softcap 50, final softcap 30, GeGLU,
+tied embeddings. Local layers sub-quadratic -> long_500k runs (global-layer
+KV sharded over data)."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="gemma2-2b", family="dense",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, d_ff=9216,
+    vocab=256_000, head_dim=256,
+    group=(BlockSpec("attn", attn_scope="local"),
+           BlockSpec("attn", attn_scope="global")),
+    local_window=4096, attn_softcap=50.0, final_softcap=30.0,
+    ffn_kind="geglu", tie_embeddings=True,
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="gemma2-2b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab=512, head_dim=16,
+    group=(BlockSpec("attn", attn_scope="local"),
+           BlockSpec("attn", attn_scope="global")),
+    local_window=16, attn_softcap=50.0, final_softcap=30.0,
+    ffn_kind="geglu", tie_embeddings=True,
+)
+
+register(CONFIG, SMOKE)

@@ -1,0 +1,34 @@
+"""llama4-scout-17b-a16e [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 16e top-1 +
+shared expert; iRoPE-style 3 chunked-local : 1 global layer pattern ->
+sub-quadratic on 3/4 layers, long_500k runs."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=8192,
+    vocab=202_048, head_dim=128,
+    group=(BlockSpec("attn", attn_scope="chunked"),
+           BlockSpec("attn", attn_scope="chunked"),
+           BlockSpec("attn", attn_scope="chunked"),
+           BlockSpec("attn", attn_scope="global")),
+    chunk_size=8192,
+    n_experts=16, top_k=1, n_shared_experts=1, ffn_kind="swiglu",
+    rope_theta=500_000.0,
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="llama4-scout-smoke", family="moe",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab=512, head_dim=16,
+    group=(BlockSpec("attn", attn_scope="chunked"),
+           BlockSpec("attn", attn_scope="chunked"),
+           BlockSpec("attn", attn_scope="chunked"),
+           BlockSpec("attn", attn_scope="global")),
+    chunk_size=16,
+    n_experts=4, top_k=1, n_shared_experts=1, ffn_kind="swiglu",
+)
+
+register(CONFIG, SMOKE)

@@ -1,0 +1,29 @@
+"""minicpm3-4b [hf:openbmb/MiniCPM3-4B].
+
+62L d_model=2560 40H d_ff=6400 vocab=73448; MLA attention (q_lora=768,
+kv_lora=256, qk_nope=64, qk_rope=32, v_head=64). Full attention ->
+long_500k skipped."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="minicpm3-4b", family="dense",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40, d_ff=6400,
+    vocab=73_448,
+    group=(BlockSpec("attn"),),
+    attn_kind="mla", q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+    ffn_kind="swiglu",
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="minicpm3-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+    vocab=512,
+    group=(BlockSpec("attn"),),
+    attn_kind="mla", q_lora_rank=32, kv_lora_rank=16,
+    qk_nope_dim=8, qk_rope_dim=8, v_head_dim=8,
+    ffn_kind="swiglu",
+)
+
+register(CONFIG, SMOKE)

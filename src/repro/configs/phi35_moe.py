@@ -1,0 +1,24 @@
+"""phi3.5-moe-42b-a6.6b [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 vocab=32064, MoE 16 experts top-2.
+Pure full attention -> long_500k skipped (DESIGN.md §5)."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=6400,
+    vocab=32064, head_dim=128,
+    group=(BlockSpec("attn"),),
+    n_experts=16, top_k=2, ffn_kind="swiglu",
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="phi3.5-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab=512, head_dim=16,
+    group=(BlockSpec("attn"),),
+    n_experts=4, top_k=2, ffn_kind="swiglu",
+)
+
+register(CONFIG, SMOKE)

@@ -1,0 +1,25 @@
+"""phi-3-vision-4.2b [hf:microsoft/Phi-3-vision-128k-instruct].
+
+phi3-mini backbone: 32L d_model=3072 32H d_ff=8192 vocab=32064; CLIP
+frontend STUBBED: input_specs provides patch embeddings (B, 256, D) which
+are prepended to the text stream. Full attention -> long_500k skipped."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=32_064, head_dim=96,
+    group=(BlockSpec("attn"),),
+    frontend="patch", num_patches=256, ffn_kind="swiglu",
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="phi3-vision-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+    vocab=512, head_dim=16,
+    group=(BlockSpec("attn"),),
+    frontend="patch", num_patches=8, ffn_kind="swiglu",
+)
+
+register(CONFIG, SMOKE)

@@ -1,0 +1,24 @@
+"""qwen2-72b [arXiv:2407.10671; hf].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064, QKV bias.
+Full attention -> long_500k skipped."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="qwen2-72b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29_568,
+    vocab=152_064, head_dim=128,
+    group=(BlockSpec("attn"),),
+    qkv_bias=True, rope_theta=1_000_000.0, ffn_kind="swiglu",
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab=512, head_dim=16,
+    group=(BlockSpec("attn"),),
+    qkv_bias=True, ffn_kind="swiglu",
+)
+
+register(CONFIG, SMOKE)

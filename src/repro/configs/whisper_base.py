@@ -1,0 +1,25 @@
+"""whisper-base [arXiv:2212.04356; unverified].
+
+6L enc + 6L dec, d_model=512 8H (MHA) d_ff=2048 vocab=51865; conv frontend
+STUBBED: input_specs provides precomputed frame embeddings (B,S,D).
+Enc-dec; 500k decode not meaningful for 30s windows -> long_500k skipped."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+    vocab=51_865,
+    group=(BlockSpec("attn"),),
+    encoder_layers=6, frontend="frames", ffn_kind="geglu",
+    supports_long_context=False,
+)
+
+SMOKE = ArchConfig(
+    name="whisper-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+    vocab=512,
+    group=(BlockSpec("attn"),),
+    encoder_layers=2, frontend="frames", ffn_kind="geglu",
+)
+
+register(CONFIG, SMOKE)

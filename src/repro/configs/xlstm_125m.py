@@ -1,0 +1,25 @@
+"""xlstm-125m [arXiv:2405.04517; unverified].
+
+12L d_model=768 4H d_ff=0 (no separate FFN; blocks carry their own
+projections) vocab=50304; alternating mLSTM / sLSTM blocks. Recurrent ->
+long_500k runs."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="xlstm-125m", family="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab=50_304,
+    group=(BlockSpec("mlstm"), BlockSpec("slstm")),
+    ffn_kind="none",
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="xlstm-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab=512,
+    group=(BlockSpec("mlstm"), BlockSpec("slstm")),
+    ffn_kind="none",
+)
+
+register(CONFIG, SMOKE)

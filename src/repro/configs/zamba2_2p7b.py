@@ -1,0 +1,25 @@
+"""zamba2-2.7b [arXiv:2411.15242; hf].
+
+54L d_model=2560 Mamba2 backbone (ssm_state=64) with a SHARED attention
+(+FFN) block applied every 6th layer (32H MHA, d_ff=10240). Hybrid ->
+long_500k runs."""
+from repro.configs.base import ArchConfig, BlockSpec, register
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=10_240,
+    vocab=32_000,
+    group=(BlockSpec("mamba2"),) * 5 + (BlockSpec("attn", shared=True),),
+    ssm_state=64, ssm_expand=2, ssm_chunk=64, ffn_kind="swiglu",
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="zamba2-smoke", family="hybrid",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+    vocab=512,
+    group=(BlockSpec("mamba2"),) * 1 + (BlockSpec("attn", shared=True),),
+    ssm_state=16, ssm_expand=2, ssm_chunk=16, ffn_kind="swiglu",
+)
+
+register(CONFIG, SMOKE)

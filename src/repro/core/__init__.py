@@ -1,0 +1,6 @@
+from repro.core.sparse_tensor import SparseTensor
+from repro.core import api, distributed, losses, tttp, utils
+from repro.core import completion
+
+__all__ = ["SparseTensor", "api", "distributed", "losses", "tttp", "utils",
+           "completion"]

@@ -1,0 +1,101 @@
+"""NumPy-style user-facing facade — the Cyclops-Python-interface analogue.
+
+Mirrors the paper's Listings 1–7 surface: tensor constructors, einsum over
+mixed sparse/dense operands (the contraction patterns arising in tensor
+completion), and TTTP. Distribution is invisible at this layer — arrays may
+be sharded; ops run identically (the paper's parallelism-obliviousness).
+
+    import repro.core.api as ctf
+    T = ctf.random_sparse((I, J, K), nnz, key)     # fill_sp_random
+    S = ctf.TTTP(T, [U, V, W])                     # Listing 3
+    y = ctf.einsum("ijk,jr,kr->ir", T, V, W)       # MTTKRP
+    a = ctf.einsum("ijk->i", S)                    # sparse reduction
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_tensor import SparseTensor
+from repro.core import tttp as _tttp
+from repro.sparse import ops as sops
+
+Tensor = Union[SparseTensor, jax.Array]
+
+
+def tensor(shape, sp: bool = False, cap: Optional[int] = None) -> Tensor:
+    """ctf.tensor analogue; sparse tensors start empty with capacity cap."""
+    if not sp:
+        return jnp.zeros(shape)
+    cap = cap or 1
+    return SparseTensor(jnp.zeros((cap, len(shape)), jnp.int32),
+                        jnp.zeros((cap,)), jnp.zeros((cap,), bool),
+                        tuple(shape), nnz=0)
+
+
+def random_sparse(shape, nnz: int, key, cap: Optional[int] = None) -> SparseTensor:
+    return SparseTensor.random(key, shape, nnz, cap=cap)
+
+
+def ones(shape) -> jax.Array:
+    return jnp.ones(shape)
+
+
+def eye(n: int) -> jax.Array:
+    return jnp.eye(n)
+
+
+def TTTP(st: SparseTensor, factors: Sequence[Optional[jax.Array]]) -> SparseTensor:
+    """Paper Listing 3; accepts None entries and vector factors."""
+    return _tttp.tttp(st, factors)
+
+
+def _parse(expr: str):
+    lhs, rhs = expr.replace(" ", "").split("->")
+    return lhs.split(","), rhs
+
+
+def einsum(expr: str, *operands: Tensor) -> Tensor:
+    """Einstein summation over mixed sparse/dense operands.
+
+    Supported sparse patterns (those arising in the paper's algorithms):
+      * pure-dense expressions — delegated to jnp.einsum;
+      * one sparse operand, reduction only:        "ijk->i"
+      * one sparse + one dense matrix (TTM):        "ijk,kr->ijr"
+      * MTTKRP family (sparse + N−1 factors):       "ijk,jr,kr->ir"
+    """
+    terms, out = _parse(expr)
+    sparse_pos = [i for i, op in enumerate(operands)
+                  if isinstance(op, SparseTensor)]
+    if not sparse_pos:
+        return jnp.einsum(expr, *operands)
+    if len(sparse_pos) != 1 or sparse_pos[0] != 0:
+        raise NotImplementedError(
+            "sparse einsum supports a single sparse operand in first position")
+    st: SparseTensor = operands[0]
+    s_term = terms[0]
+    if len(operands) == 1:
+        if len(out) == 1 and out in s_term:
+            return st.reduce_mode(s_term.index(out))
+        if out == "":
+            return st.sum()
+        raise NotImplementedError(f"unsupported sparse reduction {expr}")
+    # factor operands must be (dim, r)-shaped with shared output rank index
+    if len(out) == 2 and out[0] in s_term:
+        mode = s_term.index(out[0])
+        r_idx = out[1]
+        factors: list = [None] * st.ndim
+        for term, op in zip(terms[1:], operands[1:]):
+            if len(term) != 2 or term[1] != r_idx or term[0] not in s_term:
+                raise NotImplementedError(f"unsupported term {term} in {expr}")
+            factors[s_term.index(term[0])] = op
+        return sops.mttkrp(st, factors, mode)
+    if len(out) == len(s_term) and set(out) - set(s_term):
+        # TTM: "ijk,kr->ijr"-style (one contracted mode, output keeps r)
+        (term2, w), = [(t, o) for t, o in zip(terms[1:], operands[1:])]
+        mode = s_term.index(term2[0])
+        return sops.ttm_dense_output(st, w, mode)
+    raise NotImplementedError(f"unsupported sparse einsum pattern {expr}")

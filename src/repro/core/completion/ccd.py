@@ -1,0 +1,115 @@
+"""CCD++ for tensor completion (paper §2.3, Listings 5–6).
+
+Maintains the sparse residual ρ_n = t_n − ⟨u_i, v_j, w_k⟩ on the Ω pattern and
+updates one factor column at a time, alternating modes per column (CCD++
+ordering [Yu et al.]). Closed-form column update:
+
+    u_ir ← ( Σ_{(j,k)∈Ω_i} v_jr w_kr ρ^(r)_n ) / ( λ + Σ_{(j,k)∈Ω_i} v²_jr w²_kr )
+    with ρ^(r)_n = ρ_n + u_ir v_jr w_kr  (add the old rank-1 term back)
+
+Two implementations, as in the paper:
+* ``ccd_sweep``      — einsum-style gather/segment-sum contractions (Listing 5);
+* ``ccd_sweep_tttp`` — routed through the TTTP kernel + sparse mode reduction
+                       (Listing 6), which the paper found 1.40–1.84× faster.
+Both are ctx-parameterized (nonzeros sharded over data ⇒ psum of segment
+sums; factors replicated — CCD's column updates leave no model axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import AxisCtx, LOCAL
+from repro.core.sparse_tensor import SparseTensor
+from repro.kernels import ops as kops
+
+
+def residual_values(st: SparseTensor, factors: Sequence[jax.Array],
+                    ctx: AxisCtx = LOCAL) -> jax.Array:
+    """ρ_n = t_n − model_n on the Ω pattern (via TTTP machinery)."""
+    from repro.core.tttp import multilinear_values
+    model = ctx.psum_model(multilinear_values(st, list(factors)))
+    return (st.values - model) * st.mask
+
+
+def _column(f: jax.Array, r) -> jax.Array:
+    return jax.lax.dynamic_slice_in_dim(f, r, 1, axis=1)[:, 0]
+
+
+def _set_column(f: jax.Array, r, col: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_slice_in_dim(f, col[:, None], r, axis=1)
+
+
+def _ccd_column_update_einsum(rho, st, cols, mode, lam, ctx):
+    """Numerator/denominator via direct gather→multiply→segment-sum."""
+    other = [d for d in range(st.ndim) if d != mode]
+    vw = jnp.ones_like(rho)
+    vw2 = jnp.ones_like(rho)
+    for d in other:
+        c = cols[d][st.indices[:, d]]
+        vw = vw * c
+        vw2 = vw2 * jnp.square(c)
+    rows = st.indices[:, mode]
+    n = st.shape[mode]
+    a = ctx.psum_data(jax.ops.segment_sum(vw * rho, rows, num_segments=n))
+    den0 = ctx.psum_data(jax.ops.segment_sum(vw2 * st.mask, rows, num_segments=n))
+    new_col = (a + cols[mode] * den0) / (lam + den0)
+    # residual update: ρ += (old − new) v w  at each nonzero
+    delta = (cols[mode] - new_col)[rows] * vw
+    return new_col, (rho + delta) * st.mask
+
+
+def _ccd_column_update_tttp(rho, st, cols, mode, lam, ctx):
+    """Same update routed through TTTP + sparse mode-reduction (Listing 6)."""
+    other = [d for d in range(st.ndim) if d != mode]
+    rho_st = st.with_values(rho)
+    fac = [None] * st.ndim
+    fac2 = [None] * st.ndim
+    for d in other:
+        fac[d] = cols[d]
+        fac2[d] = jnp.square(cols[d])
+    a_sp = kops.tttp(rho_st, fac)                      # A = TTTP(ρ,[None,v,w])
+    a = ctx.psum_data(a_sp.reduce_mode(mode))          # a = einsum('ijk->i', A)
+    omega = st.with_values(jnp.ones_like(rho) * st.mask)
+    b_sp = kops.tttp(omega, fac2)                      # B = TTTP(Ω,[None,v²,w²])
+    den0 = ctx.psum_data(b_sp.reduce_mode(mode))
+    new_col = (a + cols[mode] * den0) / (lam + den0)
+    vw = kops.tttp_values(omega, fac)
+    rows = st.indices[:, mode]
+    delta = (cols[mode] - new_col)[rows] * vw
+    return new_col, (rho + delta) * st.mask
+
+
+def _ccd_sweep_impl(update_fn, st, factors, rho, lam, ctx):
+    ndim = st.ndim
+    rank = factors[0].shape[1]
+    fs = list(factors)
+
+    def body(r, carry):
+        fs, rho = carry
+        fs = list(fs)
+        for d in range(ndim):
+            cols = [_column(f, r) for f in fs]
+            new_col, rho = update_fn(rho, st, cols, d, lam, ctx)
+            fs[d] = _set_column(fs[d], r, new_col)
+        return tuple(fs), rho
+
+    fs, rho = jax.lax.fori_loop(0, rank, body, (tuple(fs), rho))
+    return list(fs), rho
+
+
+def ccd_sweep(st: SparseTensor, factors: Sequence[jax.Array], rho: jax.Array,
+              lam: float, ctx: AxisCtx = LOCAL
+              ) -> Tuple[List[jax.Array], jax.Array]:
+    """One CCD++ sweep (every column × every mode), einsum variant."""
+    return _ccd_sweep_impl(_ccd_column_update_einsum, st, factors, rho, lam, ctx)
+
+
+def ccd_sweep_tttp(st: SparseTensor, factors: Sequence[jax.Array],
+                   rho: jax.Array, lam: float, ctx: AxisCtx = LOCAL
+                   ) -> Tuple[List[jax.Array], jax.Array]:
+    """One CCD++ sweep, TTTP-based variant (paper Listing 6)."""
+    return _ccd_sweep_impl(_ccd_column_update_tttp, st, factors, rho, lam, ctx)

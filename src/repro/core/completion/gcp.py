@@ -1,0 +1,84 @@
+"""Generalized-loss tensor completion (GCP) — the assigned-title revision.
+
+Minimizes  Σ_{n∈Ω} ℓ(t_n, m_n) + λ Σ_d ‖A_d‖²  for any elementwise loss
+(``repro.core.losses``). The gradient w.r.t. factor ``d`` is
+
+    ∇_{A_d} = MTTKRP( Ω-pattern tensor with values ∂ℓ/∂m |_n , factors≠d )
+              + 2λ A_d
+
+— i.e. exactly the paper's kernels with the loss gradient in place of the
+residual; quadratic loss recovers §2.4's (2×) gradient. Optimized with plain
+GD or Adam (both deterministic full-batch; combine with ``sgd.sample_entries``
+for the stochastic variant).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import AxisCtx, LOCAL
+from repro.core.losses import Loss
+from repro.core.sparse_tensor import SparseTensor
+from repro.sparse import ops as sops
+
+
+class AdamState(NamedTuple):
+    mu: List[jax.Array]
+    nu: List[jax.Array]
+    count: jax.Array
+
+
+def gcp_adam_init(factors: Sequence[jax.Array]) -> AdamState:
+    return AdamState([jnp.zeros_like(f) for f in factors],
+                     [jnp.zeros_like(f) for f in factors],
+                     jnp.zeros((), jnp.int32))
+
+
+def gcp_loss(st: SparseTensor, factors: Sequence[jax.Array], loss: Loss,
+             lam: float, ctx: AxisCtx = LOCAL) -> jax.Array:
+    from repro.core.tttp import multilinear_values
+    model = ctx.psum_model(multilinear_values(st, list(factors)))
+    data = ctx.psum_data(jnp.sum(jnp.where(st.mask,
+                                           loss.value(st.values, model), 0.0)))
+    reg = lam * sum(jnp.sum(jnp.square(f)) for f in factors)
+    return data + reg
+
+
+def gcp_gradients(st: SparseTensor, factors: Sequence[jax.Array], loss: Loss,
+                  lam: float, ctx: AxisCtx = LOCAL) -> List[jax.Array]:
+    from repro.core.tttp import multilinear_values
+    model = ctx.psum_model(multilinear_values(st, list(factors)))
+    g_vals = jnp.where(st.mask, loss.grad(st.values, model), 0.0)
+    g_st = st.with_values(g_vals)
+    grads = []
+    for d in range(st.ndim):
+        fs = list(factors)
+        fs[d] = None
+        g = ctx.psum_data(sops.mttkrp(g_st, fs, d))
+        grads.append(g + 2.0 * lam * factors[d])
+    return grads
+
+
+def gcp_step(st: SparseTensor, factors: Sequence[jax.Array], loss: Loss,
+             lam: float, lr: float, state: AdamState,
+             use_adam: bool = True, b1: float = 0.9, b2: float = 0.999,
+             eps: float = 1e-8, ctx: AxisCtx = LOCAL
+             ) -> Tuple[List[jax.Array], AdamState]:
+    """One full-batch generalized-loss update (GD or Adam)."""
+    grads = gcp_gradients(st, factors, loss, lam, ctx)
+    fs = list(factors)
+    if not use_adam:
+        return [f - lr * g for f, g in zip(fs, grads)], state
+    count = state.count + 1
+    mus, nus, out = [], [], []
+    for f, g, mu, nu in zip(fs, grads, state.mu, state.nu):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / (1 - b1 ** count)
+        nu_hat = nu / (1 - b2 ** count)
+        out.append(f - lr * mu_hat / (jnp.sqrt(nu_hat) + eps))
+        mus.append(mu)
+        nus.append(nu)
+    return out, AdamState(mus, nus, count)

@@ -1,0 +1,66 @@
+"""Stochastic gradient descent for tensor completion (paper §2.4, Listing 7).
+
+Each sweep samples S observed entries (uniformly, with replacement — the
+static-shape analogue of Cyclops' sample rate), computes the sampled
+subgradient for every factor via MTTKRP on the sample, and applies a plain
+SGD update:
+
+    s_ir = 2 Σ_{sample} v_jr w_kr (⟨u_i,v_j,w_k⟩ − t_n) · (m/S) + 2λ u_ir
+
+The (m/S) factor unbiases the data term. Under shard_map the sample is drawn
+per-shard from the local nonzeros (equal-size shuffled shards ⇒ uniform
+globally) and gradients are psum'd over the data axes.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import AxisCtx, LOCAL
+from repro.core.sparse_tensor import SparseTensor
+from repro.sparse import ops as sops
+
+
+def sample_entries(key, st: SparseTensor, sample_size: int) -> SparseTensor:
+    """Uniform with-replacement sample of the *valid* entries (Listing 7's
+    getomega-style sampling, static output shape). Exact uniformity over
+    valid entries via probability-weighted choice."""
+    p = st.valid.astype(jnp.float32)
+    p = p / jnp.maximum(jnp.sum(p), 1.0)
+    pick = jax.random.choice(key, st.cap, (sample_size,), replace=True, p=p)
+    return SparseTensor(st.indices[pick], st.values[pick],
+                        jnp.ones((sample_size,), bool), st.shape,
+                        nnz=sample_size)
+
+
+def sgd_sweep(key, st: SparseTensor, factors: Sequence[jax.Array],
+              lam: float, lr: float, sample_size: int,
+              ctx: AxisCtx = LOCAL) -> List[jax.Array]:
+    """One SGD sweep: sample once, update every factor matrix.
+
+    The data-term estimator is unbiased per shard: each shard samples its
+    local valid entries and scales by (local_valid / sample_size); the psum
+    over data axes then sums the per-shard expectations."""
+    from repro.core.tttp import multilinear_values
+    if ctx.data is not None:
+        # decorrelate per-shard sampling
+        names = ctx.data if isinstance(ctx.data, tuple) else (ctx.data,)
+        idx = 0
+        for n in names:
+            idx = idx * jax.lax.axis_size(n) + jax.lax.axis_index(n)
+        key = jax.random.fold_in(key, idx)
+    sample = sample_entries(key, st, sample_size)
+    scale = st.count_valid().astype(jnp.float32) / sample_size
+    fs = list(factors)
+    for d in range(st.ndim):
+        model = ctx.psum_model(multilinear_values(sample, fs))
+        resid = sample.with_values(model - sample.values)  # (⟨·⟩ − t)
+        g_fs = list(fs)
+        g_fs[d] = None
+        grad = sops.mttkrp(resid, g_fs, d)
+        grad = ctx.psum_data(grad * scale)
+        grad = 2.0 * grad + 2.0 * lam * fs[d]
+        fs[d] = fs[d] - lr * grad
+    return fs

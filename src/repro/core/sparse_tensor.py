@@ -1,0 +1,180 @@
+"""SparseTensor: the distributed sparse-tensor container of the framework.
+
+Representation (TPU adaptation of Cyclops' COO + CCSR, see DESIGN.md §3):
+
+* padded COO — ``indices (cap, ndim) int32``, ``values (cap,) + optional
+  trailing dense axis``, and an explicit ``valid (cap,) bool`` mask. Padded
+  entries carry ``index = 0`` and ``value = 0`` so gathers stay in-bounds and
+  linear reductions are unaffected; the mask guards the nonlinear paths
+  (residuals, generalized-loss gradients). ``cap`` is static, making every
+  operation SPMD-compatible; the mask is a pytree child, so it shards with
+  the data — inside ``shard_map`` each shard sees its *local* validity,
+  which static metadata could not express.
+* storage is Θ(cap) = Θ(m) — never Θ(rows) — preserving the paper's
+  hypersparse Θ(m) guarantee.
+
+Sorting by a mode produces the CCSR-style view used by the bucketed Pallas
+kernels (see ``repro.sparse.ccsr``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.utils import delinearize, linearize, pad_axis, round_up
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseTensor:
+    """Padded-COO sparse tensor (optionally with a trailing dense axis of
+    size R, used for pairwise-contraction intermediates à la paper §3.2)."""
+
+    indices: jax.Array  # (cap, ndim) int32
+    values: jax.Array   # (cap,) or (cap, R)
+    valid: jax.Array    # (cap,) bool
+    shape: Tuple[int, ...]             # static logical shape (sparse modes)
+    nnz: Optional[int] = None          # static GLOBAL nonzero count hint
+    sorted_mode: Optional[int] = None  # mode by which entries are sorted
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return ((self.indices, self.values, self.valid),
+                (self.shape, self.nnz, self.sorted_mode))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indices, values, valid = children
+        shape, nnz, sorted_mode = aux
+        return cls(indices, values, valid, shape, nnz, sorted_mode)
+
+    # -- basic properties ---------------------------------------------------
+    @property
+    def cap(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def dense_dim(self) -> Optional[int]:
+        return None if self.values.ndim == 1 else self.values.shape[1]
+
+    @property
+    def mask(self) -> jax.Array:
+        """(cap,) validity mask."""
+        return self.valid
+
+    def _vmask(self) -> jax.Array:
+        return self.valid if self.values.ndim == 1 else self.valid[:, None]
+
+    def masked_values(self) -> jax.Array:
+        return jnp.where(self._vmask(), self.values, 0)
+
+    def count_valid(self) -> jax.Array:
+        return jnp.sum(self.valid)
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def from_coo(cls, indices, values, shape, cap: Optional[int] = None,
+                 pad_multiple: int = 1) -> "SparseTensor":
+        indices = jnp.asarray(indices, jnp.int32)
+        values = jnp.asarray(values)
+        nnz = int(indices.shape[0])
+        if cap is None:
+            cap = round_up(max(nnz, 1), pad_multiple)
+        valid = jnp.arange(cap) < nnz
+        indices = pad_axis(indices, cap, axis=0, value=0)
+        values = pad_axis(values, cap, axis=0, value=0)
+        return cls(indices, values, valid, tuple(int(s) for s in shape), nnz)
+
+    @classmethod
+    def random(cls, key, shape, nnz: int, cap: Optional[int] = None,
+               dtype=jnp.float32, low=-1.0, high=1.0) -> "SparseTensor":
+        """Uniform-random sparse tensor (paper's ``fill_sp_random``).
+
+        Indices are sampled i.i.d. uniformly (collisions possible but
+        vanishingly rare at the densities of interest, matching Cyclops)."""
+        kidx, kval = jax.random.split(key)
+        idx_cols = []
+        for d, s in enumerate(shape):
+            kidx, kd = jax.random.split(kidx)
+            idx_cols.append(jax.random.randint(kd, (nnz,), 0, s, jnp.int32))
+        indices = jnp.stack(idx_cols, axis=1)
+        values = jax.random.uniform(kval, (nnz,), dtype, low, high)
+        return cls.from_coo(indices, values, shape, cap=cap)
+
+    # -- transformations ------------------------------------------------------
+    def sort_by_mode(self, mode: int) -> "SparseTensor":
+        """Sort entries so that ``indices[:, mode]`` is non-decreasing, with
+        padded entries moved to the end (they sort to ``shape[mode]``)."""
+        key = jnp.where(self.valid, self.indices[:, mode], self.shape[mode])
+        perm = jnp.argsort(key, stable=True)
+        return SparseTensor(self.indices[perm], self.values[perm],
+                            self.valid[perm], self.shape, self.nnz,
+                            sorted_mode=mode)
+
+    def with_values(self, values: jax.Array) -> "SparseTensor":
+        """Same pattern, new values (zeroed on padding)."""
+        vmask = self.valid if values.ndim == 1 else self.valid[:, None]
+        return SparseTensor(self.indices, jnp.where(vmask, values, 0),
+                            self.valid, self.shape, self.nnz, self.sorted_mode)
+
+    def astype(self, dtype) -> "SparseTensor":
+        return SparseTensor(self.indices, self.values.astype(dtype),
+                            self.valid, self.shape, self.nnz, self.sorted_mode)
+
+    def todense(self) -> jax.Array:
+        """Materialize (small tensors / tests only)."""
+        out_shape = self.shape if self.dense_dim is None else (*self.shape, self.dense_dim)
+        out = jnp.zeros(out_shape, self.values.dtype)
+        return out.at[tuple(self.indices[:, d] for d in range(self.ndim))].add(
+            self.masked_values())
+
+    def transpose(self, perm: Sequence[int]) -> "SparseTensor":
+        """Permute sparse modes (paper Fig. 4 'transpose'); returns new tensor."""
+        perm = tuple(perm)
+        new_idx = self.indices[:, list(perm)]
+        new_shape = tuple(self.shape[p] for p in perm)
+        return SparseTensor(new_idx, self.values, self.valid, new_shape,
+                            self.nnz, None)
+
+    def reshape(self, new_shape: Sequence[int]) -> "SparseTensor":
+        """Reshape preserving row-major global order (paper Fig. 4 'reshape')."""
+        new_shape = tuple(int(s) for s in new_shape)
+        if int(np.prod(new_shape)) != int(np.prod(self.shape)):
+            raise ValueError(f"reshape {self.shape} -> {new_shape}: size mismatch")
+        lin = linearize(self.indices, self.shape)
+        lin = jnp.where(self.valid, lin, 0)
+        new_idx = delinearize(lin, new_shape)
+        new_idx = jnp.where(self.valid[:, None], new_idx, 0)
+        return SparseTensor(new_idx, self.values, self.valid, new_shape,
+                            self.nnz, None)
+
+    def scale(self, alpha) -> "SparseTensor":
+        return self.with_values(self.values * alpha)
+
+    def add(self, other: "SparseTensor") -> "SparseTensor":
+        """Sparse + sparse with identical pattern (same indices)."""
+        assert self.shape == other.shape
+        return self.with_values(self.values + other.values)
+
+    def reduce_mode(self, mode: int, num_segments: Optional[int] = None) -> jax.Array:
+        """``einsum('ijk->i')``-style reduction onto one mode (dense output).
+
+        Works for scalar or trailing-dense values."""
+        num_segments = num_segments or self.shape[mode]
+        return jax.ops.segment_sum(self.masked_values(),
+                                   self.indices[:, mode],
+                                   num_segments=num_segments)
+
+    def sum(self) -> jax.Array:
+        return jnp.sum(self.masked_values())
+
+    def norm(self) -> jax.Array:
+        return jnp.sqrt(jnp.sum(jnp.square(self.masked_values())))

@@ -1,0 +1,92 @@
+"""Small shared utilities: padding, rounding, tree helpers."""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_up(x: int, mult: int) -> int:
+    """Round ``x`` up to the nearest multiple of ``mult``."""
+    return ((x + mult - 1) // mult) * mult
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def pad_axis(x: jax.Array, size: int, axis: int = 0, value=0) -> jax.Array:
+    """Pad ``x`` along ``axis`` up to ``size`` with ``value``."""
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    if cur > size:
+        raise ValueError(f"cannot pad axis {axis} of size {cur} down to {size}")
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - cur)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def linearize(indices: jax.Array, shape: Sequence[int]) -> jax.Array:
+    """Row-major linearization of an ``(..., ndim)`` int index array.
+
+    Requires ``prod(shape)`` to fit the widest available integer (int64 with
+    jax x64 enabled, int32 otherwise) — guarded explicitly. Key-comparison
+    call sites use :func:`lex_sort_perm` instead, which has no such limit."""
+    total = int(np.prod([int(s) for s in shape]))
+    itype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    if total > np.iinfo(np.dtype(itype.dtype.name)).max:
+        raise ValueError(
+            f"linearize: prod(shape)={total} overflows {itype.dtype.name}; "
+            "enable jax x64 or avoid linearized indexing at this scale")
+    strides = np.ones(len(shape), dtype=np.int64)
+    for d in range(len(shape) - 2, -1, -1):
+        strides[d] = strides[d + 1] * shape[d + 1]
+    return jnp.sum(indices.astype(itype) * jnp.asarray(strides, itype.dtype.name),
+                   axis=-1)
+
+
+def lex_sort_perm(indices: jax.Array, mask: jax.Array,
+                  cols: Sequence[int]) -> jax.Array:
+    """Permutation sorting rows of ``indices`` lexicographically by ``cols``
+    (first col most significant), invalid (mask=False) rows last. Multi-pass
+    stable argsort — overflow-free at any tensor scale."""
+    n = indices.shape[0]
+    perm = jnp.arange(n)
+    for c in reversed(list(cols)):
+        key = indices[perm, c]
+        perm = perm[jnp.argsort(key, stable=True)]
+    # push invalid rows to the end (stable)
+    perm = perm[jnp.argsort(~mask[perm], stable=True)]
+    return perm
+
+
+def rows_equal(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise row equality for (n, k) int arrays."""
+    return jnp.all(a == b, axis=-1)
+
+
+def delinearize(lin: jax.Array, shape: Sequence[int]) -> jax.Array:
+    """Inverse of :func:`linearize`; returns ``(..., ndim)`` int32 indices."""
+    out = []
+    itype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    rem = lin.astype(itype)
+    strides = np.ones(len(shape), dtype=np.int64)
+    for d in range(len(shape) - 2, -1, -1):
+        strides[d] = strides[d + 1] * shape[d + 1]
+    for d in range(len(shape)):
+        out.append((rem // strides[d]).astype(jnp.int32))
+        rem = rem % strides[d]
+    return jnp.stack(out, axis=-1)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def param_count(tree) -> int:
+    return sum(int(math.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))

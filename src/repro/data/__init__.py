@@ -1,0 +1,3 @@
+from repro.data import synthetic, pipeline
+
+__all__ = ["synthetic", "pipeline"]

@@ -1,0 +1,81 @@
+"""Sharded input pipelines.
+
+For completion workloads the dataset is a SparseTensor ingested once:
+shuffle → pad → device_put with nonzeros sharded over the data axes, plus
+ingest-time CCSR bucketing per mode for the Pallas kernels.
+
+For LM workloads a host-side iterator yields token batches placed with
+batch-over-data sharding; a one-deep prefetch overlaps host generation with
+device compute (the CPU-container stand-in for a real multi-host input
+service)."""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sparse_tensor import SparseTensor
+from repro.data import synthetic
+from repro.sparse import redistribute
+
+
+class CompletionDataset:
+    """Ingested, distribution-ready sparse dataset (+ per-mode bucket views)."""
+
+    def __init__(self, st: SparseTensor, key, mesh: Optional[Mesh] = None,
+                 data_axes=("data",)):
+        num_shards = 1
+        if mesh is not None:
+            import numpy as np
+            num_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+        self.tensor = synthetic.shuffle_and_pad(st, key, num_shards)
+        self.omega = self.tensor.with_values(
+            jnp.ones_like(self.tensor.values))
+        if mesh is not None:
+            axes = data_axes if len(data_axes) > 1 else data_axes[0]
+            self.tensor = redistribute.shard_nonzeros(self.tensor, mesh, axes)
+            self.omega = redistribute.shard_nonzeros(self.omega, mesh, axes)
+        self.mesh = mesh
+        self.data_axes = data_axes
+
+
+def prefetch(it: Iterator, depth: int = 1) -> Iterator:
+    """Background-thread prefetch of host batches (overlap input with step)."""
+    q: collections.deque = collections.deque()
+    lock = threading.Semaphore(0)
+    done = []
+
+    def worker():
+        for item in it:
+            q.append(item)
+            lock.release()
+        done.append(True)
+        lock.release()
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        lock.acquire()
+        if q:
+            yield q.popleft()
+        elif done:
+            return
+
+
+def lm_batches(key, vocab_size: int, batch: int, seq_len: int,
+               num_batches: int, mesh: Optional[Mesh] = None,
+               batch_axes=("data",)) -> Iterator[Dict[str, jax.Array]]:
+    """Sharded token batches for the LM train driver."""
+    stream = synthetic.token_stream(key, vocab_size, batch, seq_len,
+                                    num_batches)
+    if mesh is None:
+        yield from prefetch(stream)
+        return
+    axes = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    sharding = NamedSharding(mesh, P(axes, None))
+    for b in prefetch(stream):
+        yield {k: jax.device_put(v, sharding) for k, v in b.items()}

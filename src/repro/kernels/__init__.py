@@ -1,0 +1,6 @@
+from repro.kernels import ops, ref
+from repro.kernels.tttp import tttp_pallas
+from repro.kernels.mttkrp import mttkrp_pallas
+from repro.kernels.cg_matvec import cg_matvec_pallas
+
+__all__ = ["ops", "ref", "tttp_pallas", "mttkrp_pallas", "cg_matvec_pallas"]

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for bucketed all-at-once MTTKRP.
+
+The scatter-add of MTTKRP is the part with no TPU-native analogue (the paper
+uses CPU dense-buffer row accumulation). Our adaptation (DESIGN.md §3): the
+ingest-time CCSR bucketing (``repro.sparse.ccsr.bucketize``) groups sorted
+nonzeros into fixed-capacity buckets spanning ``block_rows`` consecutive
+output rows, and the in-bucket scatter becomes a one-hot
+``(block_rows × capacity) @ (capacity × block_r)`` matmul on the MXU.
+
+Grid: (num_buckets, R blocks). Each step:
+  1. gather factor rows for the bucket's nonzeros (VPU),
+  2. Hadamard-product with values (VPU),
+  3. one-hot segment matmul into the (block_rows, block_r) output tile (MXU).
+
+Trade-off: the one-hot matmul performs block_rows× more MACs than a scalar
+scatter would, but runs at MXU rate; for block_rows ≤ 256 this is the winning
+schedule on TPU (see EXPERIMENTS.md §Perf for the napkin math).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.sparse.ccsr import RowBlockBuckets
+
+
+def _mttkrp_kernel(other_slots, block_rows,
+                   vals_ref, idx_ref, local_ref, *refs):
+    factor_refs, out_ref = refs[:-1], refs[-1]
+    idx = idx_ref[0]              # (C, nd)
+    vals = vals_ref[0]            # (C,)
+    local = local_ref[0]          # (C,)
+    prod = None
+    for slot, f_ref in zip(other_slots, factor_refs):
+        rows = jnp.take(f_ref[...], idx[:, slot], axis=0)  # (C, block_r)
+        prod = rows if prod is None else prod * rows
+    prod = prod * vals[:, None]                            # (C, block_r)
+    onehot = (local[None, :] == jax.lax.iota(jnp.int32, block_rows)[:, None])
+    out_ref[...] = jnp.dot(onehot.astype(prod.dtype), prod,
+                           preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def mttkrp_pallas(buckets: RowBlockBuckets,
+                  factors: Sequence[Optional[jax.Array]],
+                  block_r: int = 128, interpret: bool = True) -> jax.Array:
+    """Bucketed MTTKRP. Returns (num_blocks * block_rows, R); callers slice
+    to ``shape[mode]`` rows."""
+    nb, c = buckets.values.shape
+    nd = buckets.indices.shape[-1]
+    mode = buckets.mode
+    block_rows = buckets.block_rows
+    other = tuple(d for d in range(nd) if d != mode and factors[d] is not None)
+    fs = [factors[d] for d in other]
+    r = fs[0].shape[1]
+    block_r = min(block_r, r)
+    if r % block_r:
+        raise ValueError(f"R={r} % block_r={block_r} nonzero; pad first")
+    grid = (nb, r // block_r)
+    in_specs = [
+        pl.BlockSpec((1, c), lambda b, j: (b, 0)),
+        pl.BlockSpec((1, c, nd), lambda b, j: (b, 0, 0)),
+        pl.BlockSpec((1, c), lambda b, j: (b, 0)),
+    ] + [
+        pl.BlockSpec((f.shape[0], block_r), lambda b, j: (0, j)) for f in fs
+    ]
+    kernel = functools.partial(_mttkrp_kernel, other, block_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, block_r), lambda b, j: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((nb * block_rows, r),
+                                       buckets.values.dtype),
+        interpret=interpret,
+    )(buckets.values, buckets.indices, buckets.local_row, *fs)
+    return out

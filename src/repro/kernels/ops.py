@@ -1,0 +1,94 @@
+"""jit'd wrappers dispatching between the Pallas kernels and the pure-jnp
+reference paths, with shape padding to block multiples.
+
+Dispatch policy: Pallas (interpret on CPU, compiled on TPU) when
+``use_pallas`` or the global default says so; pure jnp otherwise. All
+wrappers are shape-polymorphic over padding: inputs are padded to block
+multiples and outputs sliced back.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_tensor import SparseTensor
+from repro.core.utils import pad_axis, round_up
+from repro.kernels import ref as kref
+from repro.kernels.cg_matvec import cg_matvec_pallas
+from repro.kernels.mttkrp import mttkrp_pallas
+from repro.kernels.tttp import tttp_pallas
+from repro.sparse.ccsr import RowBlockBuckets
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+_DEFAULT_USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1" or _ON_TPU
+_INTERPRET = not _ON_TPU
+
+
+def _pad_factors(factors, block_r):
+    r = next(f.shape[1] for f in factors if f is not None)
+    rp = round_up(r, block_r)
+    if rp == r:
+        return factors, r
+    return [None if f is None else pad_axis(f, rp, axis=1) for f in factors], r
+
+
+def tttp_values(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
+                use_pallas: Optional[bool] = None,
+                block_m: int = 1024, block_r: int = 128) -> jax.Array:
+    """TTTP output values for a padded-COO SparseTensor. Vector factors are
+    promoted to single-column matrices (paper's vector-list form)."""
+    use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
+    factors = [None if f is None else (f[:, None] if f.ndim == 1 else f)
+               for f in factors]
+    vals = st.values * st.mask
+    if not use_pallas:
+        return kref.tttp_ref(vals, st.indices, factors)
+    block_m = min(block_m, round_up(st.cap, 8))
+    mp = round_up(st.cap, block_m)
+    fs, r = _pad_factors(factors, block_r)
+    out = tttp_pallas(pad_axis(vals, mp), pad_axis(st.indices, mp), fs,
+                      block_m=block_m, block_r=min(block_r, round_up(r, 128)),
+                      interpret=_INTERPRET)
+    return out[:st.cap]
+
+
+def tttp(st: SparseTensor, factors, **kw) -> SparseTensor:
+    return st.with_values(tttp_values(st, factors, **kw))
+
+
+def mttkrp_bucketed(buckets: RowBlockBuckets,
+                    factors: Sequence[Optional[jax.Array]],
+                    num_rows: Optional[int] = None,
+                    use_pallas: Optional[bool] = None,
+                    block_r: int = 128) -> jax.Array:
+    """All-at-once MTTKRP over ingest-time buckets; returns (num_rows, R)."""
+    use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
+    num_rows = num_rows or buckets.shape[buckets.mode]
+    if use_pallas:
+        fs, r = _pad_factors(factors, block_r)
+        out = mttkrp_pallas(buckets, fs, block_r=block_r, interpret=_INTERPRET)
+        return out[:num_rows, :r]
+    out = kref.mttkrp_bucketed_ref(buckets.values, buckets.indices,
+                                   buckets.local_row, factors,
+                                   buckets.mode, buckets.block_rows)
+    return out[:num_rows]
+
+
+def cg_matvec_bucketed(buckets: RowBlockBuckets,
+                       factors: Sequence[Optional[jax.Array]],
+                       x: jax.Array, num_rows: Optional[int] = None,
+                       use_pallas: Optional[bool] = None) -> jax.Array:
+    """Fused implicit-CG Gram matvec; buckets hold the Ω indicator values."""
+    use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
+    num_rows = num_rows or buckets.shape[buckets.mode]
+    if use_pallas:
+        out = cg_matvec_pallas(buckets, factors, x, interpret=_INTERPRET)
+        return out[:num_rows]
+    out = kref.cg_matvec_bucketed_ref(buckets.values, buckets.indices,
+                                      buckets.local_row, factors, x,
+                                      buckets.mode, buckets.block_rows)
+    return out[:num_rows]

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for TTTP (paper §3.2).
+
+Grid: (nonzero blocks, R blocks). Per step the kernel gathers up to
+``block_m`` factor rows per mode from VMEM-resident factor column-slices,
+forms the Hadamard product on the VPU, reduces the R tile, and accumulates
+into the per-nonzero output block. Output accumulation over the R grid
+dimension follows the standard revisiting-grid pattern (init at r==0).
+
+Blocking / memory notes (TPU target, validated in interpret mode on CPU):
+* value/index blocks are (block_m,) / (block_m, ndim) VMEM tiles; block_m is
+  a multiple of 8 (sublane) — default 1024;
+* factor tiles are (I_d, block_r) column slices; block_r multiple of 128
+  (lane) — the R grid axis is the paper's H-slicing realized as a grid
+  dimension, bounding VMEM at Θ(Σ I_d · block_r);
+* for factor matrices too large for VMEM the production path keeps factors in
+  HBM (``memory_space=ANY``) and DMA-streams gathered rows; on this CPU
+  container we validate the VMEM-resident variant only (DESIGN.md §3).
+* the row gather uses ``jnp.take`` along axis 0, which lowers to TPU dynamic
+  row-gather; padded entries carry value 0 and index 0, so they contribute 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.utils import cdiv
+
+
+def _tttp_kernel(nd_present, vals_ref, idx_ref, *refs):
+    factor_refs, out_ref = refs[:-1], refs[-1]
+    r_idx = pl.program_id(1)
+    idx = idx_ref[...]
+    prod = None
+    for slot, f_ref in enumerate(factor_refs):
+        rows = jnp.take(f_ref[...], idx[:, nd_present[slot]], axis=0)
+        prod = rows if prod is None else prod * rows
+    partial = jnp.sum(prod, axis=1)  # (block_m,)
+
+    @pl.when(r_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += vals_ref[...] * partial
+
+
+def tttp_pallas(values: jax.Array, indices: jax.Array,
+                factors: Sequence[Optional[jax.Array]],
+                block_m: int = 1024, block_r: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """TTTP on padded COO arrays. ``values (m,)``, ``indices (m, nd)``;
+    ``factors[d]`` is ``(shape[d], R)`` or None. m % block_m == 0 and
+    R % block_r == 0 are required (ops.py pads)."""
+    m = values.shape[0]
+    nd = indices.shape[1]
+    present = tuple(d for d, f in enumerate(factors) if f is not None)
+    fs = [factors[d] for d in present]
+    r = fs[0].shape[1]
+    block_m = min(block_m, m)
+    block_r = min(block_r, r)
+    if m % block_m or r % block_r:
+        raise ValueError(f"m={m} % block_m={block_m} or R={r} % block_r="
+                         f"{block_r} nonzero; pad first")
+    grid = (m // block_m, r // block_r)
+    in_specs = [
+        pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        pl.BlockSpec((block_m, nd), lambda i, j: (i, 0)),
+    ] + [
+        pl.BlockSpec((f.shape[0], block_r), lambda i, j: (0, j)) for f in fs
+    ]
+    kernel = functools.partial(_tttp_kernel, present)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), values.dtype),
+        interpret=interpret,
+    )(values, indices, *fs)

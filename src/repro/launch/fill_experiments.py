@@ -1,0 +1,27 @@
+"""Inject the generated dry-run/roofline tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.fill_experiments \
+        --dir experiments/dryrun_final --doc EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.launch.report import dryrun_table, load, roofline_table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun_final")
+    ap.add_argument("--doc", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    text = open(args.doc).read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table(recs))
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table(recs))
+    open(args.doc, "w").write(text)
+    print(f"injected {len(recs)} records into {args.doc}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+XLA_FLAGS before any jax import to materialize 512 host devices.
+
+Mesh shapes: single pod = (16, 16) ("data", "model") = 256 chips;
+multi-pod = (2, 16, 16) ("pod", "data", "model") = 512 chips. The "pod" axis
+is an extra data-parallel (FSDP) axis with slower links — collectives over
+it are what the multi-pod dry-run proves out.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many (fake) devices tests configured."""
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a production mesh ('pod' included)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))

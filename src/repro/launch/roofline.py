@@ -1,0 +1,287 @@
+"""Roofline-term extraction from compiled HLO (DESIGN.md §6).
+
+``compiled.cost_analysis()`` on the CPU backend is per-device and counts
+while (lax.scan) bodies ONCE; exact trip counts live in each while op's
+``backend_config.known_trip_count``. This parser therefore derives all three
+roofline terms directly from ``compiled.as_text()``:
+
+* compute   — Σ dot flops (2·|out|·contracted), weighted by enclosing-loop
+              trip counts;
+* memory    — Σ top-level op buffer traffic (operand+output bytes; fusion
+              internals excluded: fusion outputs are materialized buffers),
+              weighted likewise;
+* collective— Σ wire bytes of all-gather/all-reduce/reduce-scatter/
+              all-to-all/collective-permute with standard ring-cost factors
+              and replica-group-local sizes, weighted likewise.
+
+Cross-checks: unweighted flops must match cost_analysis()['flops']; the
+MODEL_FLOPS/HLO_FLOPS ratio is reported per cell in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """All dtype[shape] tokens in a type string (tuples flattened)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",") if x) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * int(np.prod(sh, dtype=np.int64)) if sh
+               else _DTYPE_BYTES[dt]
+               for dt, sh in _parse_shapes(type_str))
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    out_type: str
+    op: str
+    line: str
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[OpInfo]] = {}
+        self.entry: Optional[str] = None
+        self.def_types: Dict[str, str] = {}
+        cur = None
+        for line in text.splitlines():
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->", line)
+            if m and not line.startswith(" "):
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            om = re.match(r"\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+"
+                          r"([\w\-]+)\(", line)
+            if om:
+                name, out_type, op = om.group(1), om.group(2), om.group(3)
+                self.computations[cur].append(OpInfo(name, out_type, op, line))
+                self.def_types[name] = out_type
+
+        # while bodies -> (parent computation, trip count)
+        self.body_info: List[Tuple[str, str, int]] = []
+        for comp, ops in self.computations.items():
+            for op in ops:
+                if op.op == "while":
+                    bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                    tm = re.search(r'known_trip_count[^}]*?"n":"(\d+)"',
+                                   op.line)
+                    trip = int(tm.group(1)) if tm else 1
+                    if bm:
+                        self.body_info.append((comp, bm.group(1), trip))
+
+        # weights: entry = 1, while body = parent weight * trip (iterated)
+        self.weights: Dict[str, float] = {}
+        if self.entry:
+            self.weights[self.entry] = 1.0
+        for _ in range(8):  # propagate through nesting
+            changed = False
+            for parent, body, trip in self.body_info:
+                if parent in self.weights:
+                    w = self.weights[parent] * trip
+                    if self.weights.get(body) != w:
+                        self.weights[body] = w
+                        changed = True
+            if not changed:
+                break
+
+    # -- per-op costs -------------------------------------------------------
+
+    def _operands(self, line: str, opname: str) -> List[str]:
+        parts = line.split(opname + "(", 1)
+        if len(parts) < 2:
+            return []
+        args = parts[1].split(")", 1)[0]
+        return re.findall(r"%([\w.\-]+)", args)
+
+    def _dot_flops(self, op: OpInfo) -> float:
+        out_elems = int(np.prod(_parse_shapes(op.out_type)[0][1],
+                                dtype=np.int64))
+        ops_ = self._operands(op.line, op.op)
+        lhs_type = self.def_types.get(ops_[0], "")
+        lhs_shapes = _parse_shapes(lhs_type)
+        if not lhs_shapes:
+            return 0.0
+        lhs_shape = lhs_shapes[0][1]
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+        cdims = [int(x) for x in cm.group(1).split(",") if x] if cm else []
+        contracted = int(np.prod([lhs_shape[d] for d in cdims],
+                                 dtype=np.int64)) if cdims else 1
+        return 2.0 * out_elems * contracted
+
+    def _collective_wire_bytes(self, op: OpInfo) -> float:
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+        if gm:
+            gsize = int(gm.group(2))
+        else:
+            lm = re.search(r"replica_groups=\{\{([\d,]+)\}", op.line)
+            gsize = len(lm.group(1).split(",")) if lm else 2
+        payload = _nbytes(op.out_type)
+        k = op.op
+        if gsize <= 1:
+            return 0.0
+        if k == "all-reduce":
+            return 2.0 * (gsize - 1) / gsize * payload
+        if k == "all-gather":
+            return (gsize - 1) / gsize * payload
+        if k == "reduce-scatter":
+            in_bytes = sum(_nbytes(self.def_types.get(o, ""))
+                           for o in self._operands(op.line, op.op))
+            return (gsize - 1) / gsize * max(in_bytes, payload)
+        if k == "all-to-all":
+            return (gsize - 1) / gsize * payload
+        return float(payload)  # collective-permute
+
+    _SKIP_TRAFFIC = {"tuple", "get-tuple-element", "parameter", "bitcast",
+                     "constant", "after-all", "iota", "while", "conditional"}
+    # ops that address a window of their operands rather than the whole
+    # buffer: charging full operand bytes would bill a 32k-step scan for
+    # re-reading loop-invariant weights every iteration, which VMEM
+    # residency / in-place slicing avoids on TPU. Operand traffic for these
+    # is capped at 4× the output size (elementwise fusions are unaffected;
+    # dots are standalone ops and always pay full operand traffic).
+    _SLICED_ACCESS = {"fusion", "dynamic-slice", "dynamic-update-slice",
+                      "gather", "scatter", "copy"}
+
+    def _op_traffic(self, op: OpInfo) -> float:
+        if op.op in self._SKIP_TRAFFIC:
+            return 0.0
+        out_b = _nbytes(op.out_type)
+        cap = 4 * out_b if op.op in self._SLICED_ACCESS else None
+        in_b = 0
+        for o in self._operands(op.line, op.op):
+            b = _nbytes(self.def_types.get(o, ""))
+            in_b += min(b, cap) if cap is not None else b
+        return float(out_b + in_b)
+
+    # -- module totals --------------------------------------------------------
+
+    def totals(self) -> Dict[str, float]:
+        flops_w = flops_u = bytes_w = coll_w = 0.0
+        coll_by_kind: Dict[str, float] = {}
+        coll_counts: Dict[str, int] = {}
+        for comp, w in self.weights.items():
+            for op in self.computations.get(comp, []):
+                if op.op == "dot":
+                    f = self._dot_flops(op)
+                    flops_w += w * f
+                    flops_u += f
+                if op.op in _COLLECTIVES:
+                    b = self._collective_wire_bytes(op)
+                    coll_w += w * b
+                    coll_by_kind[op.op] = coll_by_kind.get(op.op, 0.0) + w * b
+                    coll_counts[op.op] = coll_counts.get(op.op, 0) + 1
+                bytes_w += w * self._op_traffic(op)
+        return {"flops": flops_w, "flops_body_once": flops_u,
+                "bytes": bytes_w, "collective_bytes": coll_w,
+                "collective_by_kind": coll_by_kind,
+                "collective_counts": coll_counts}
+
+
+def roofline_terms(hlo_text: str, chips: int,
+                   model_flops_total: Optional[float] = None
+                   ) -> Dict[str, float]:
+    """Per-device roofline terms in seconds (+ metadata).
+
+    HLO is already SPMD-partitioned ⇒ parsed quantities are per-device."""
+    mod = HloModule(hlo_text)
+    t = mod.totals()
+    compute_s = t["flops"] / PEAK_FLOPS
+    memory_s = t["bytes"] / HBM_BW
+    collective_s = t["collective_bytes"] / LINK_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    out = {"compute_s": compute_s, "memory_s": memory_s,
+           "collective_s": collective_s, "dominant": dominant,
+           "hlo_flops_per_device": t["flops"],
+           "hlo_bytes_per_device": t["bytes"],
+           "collective_bytes_per_device": t["collective_bytes"],
+           "collective_by_kind": t["collective_by_kind"],
+           "collective_counts": t["collective_counts"]}
+    if model_flops_total:
+        out["model_flops_total"] = model_flops_total
+        out["useful_flops_ratio"] = model_flops_total / max(
+            t["flops"] * chips, 1.0)
+    bound = max(compute_s, memory_s, collective_s)
+    out["roofline_fraction"] = compute_s / bound if bound > 0 else 0.0
+    return out
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode counts one
+    token per sequence."""
+    n_active = active_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.global_batch  # decode: 1 token/seq
+
+
+def active_params(cfg) -> float:
+    """Per-token active parameter count from the config (embeddings included
+    once; MoE counts top_k + shared experts)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.head_dim_()
+    per_attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    if cfg.attn_kind == "mla":
+        qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        per_attn = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads * qd +
+                    d * (cfg.kv_lora_rank + cfg.qk_rope_dim) +
+                    cfg.kv_lora_rank * cfg.n_heads *
+                    (cfg.qk_nope_dim + cfg.v_head_dim) +
+                    cfg.n_heads * cfg.v_head_dim * d)
+    ffn_active = 3 * d * f
+    if cfg.n_experts:
+        ffn_active = 3 * d * f * (cfg.top_k + cfg.n_shared_experts)
+    n = 0.0
+    for spec in cfg.group:
+        if spec.kind == "attn":
+            n += per_attn + (ffn_active if cfg.ffn_kind != "none" and f else 0)
+        elif spec.kind == "mamba2":
+            d_in = cfg.ssm_expand * d
+            n += d * (2 * d_in + 2 * cfg.ssm_state) + d_in * d
+        elif spec.kind == "mlstm":
+            n += 3 * d * hd * cfg.n_heads + cfg.n_heads * hd * d
+        elif spec.kind == "slstm":
+            n += 9 * d * d
+    n *= cfg.n_groups
+    n += 2 * d * v if not cfg.tie_embeddings else d * v
+    if cfg.encoder_layers:
+        n += cfg.encoder_layers * (per_attn + 3 * d * f) + \
+            cfg.n_layers * per_attn  # cross-attention
+    return n

@@ -1,0 +1,203 @@
+"""Sharding specs and ShapeDtypeStruct input stand-ins for every
+(architecture × shape cell), plus the paper's completion workloads.
+
+Param rule (TP over "model", FSDP over the data axes, layer-group leading
+dim unsharded), with a divisibility guard: any dim not divisible by its
+axis-size product falls back to replication — this single rule covers all
+10 architectures (heads like 40 or 8 that don't divide 16 simply stay
+replicated on that dim and XLA inserts the matching collectives; those show
+up in the roofline and are hillclimb targets)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.mesh import dp_axes, dp_size
+from repro.models import model as M
+
+PARAM_DTYPE = jnp.bfloat16
+ACT_DTYPE = jnp.bfloat16
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _guard(mesh: Mesh, dim: int, axes):
+    """axes if dim divisible by their size product else None."""
+    return axes if axes and dim % _axsize(mesh, axes) == 0 else None
+
+
+# -- parameter specs ---------------------------------------------------------
+
+_COL_NAMES = {"wq", "wk", "wv", "w_gate", "w_lin", "w_in", "wq_b", "wkv_b",
+              "w", "r", "w_gates"}
+_ROW_NAMES = {"wo", "w_out"}
+_REP_NAMES = {"router", "wq_a", "wkv_a"}
+
+
+def _leaf_spec(mesh: Mesh, path: Tuple, leaf, fsdp) -> P:
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    name = names[-1]
+    shape = leaf.shape
+    nd = len(shape)
+    stacked = "blocks" in names  # leading group dim
+    core = shape[1:] if stacked and nd >= 2 else shape
+    lead = (None,) if stacked and nd >= 2 else ()
+
+    def spec(*dims):
+        return P(*lead, *dims)
+
+    if name == "embed":
+        return P(_guard(mesh, shape[0], "model"), _guard(mesh, shape[1], fsdp))
+    if name == "unembed":
+        return P(_guard(mesh, shape[0], fsdp), _guard(mesh, shape[1], "model"))
+    if len(core) == 3 and name in (_COL_NAMES | _ROW_NAMES):  # MoE (E, d, f)
+        e, d1, d2 = core
+        if name in _ROW_NAMES:
+            return spec(_guard(mesh, e, "model"), None,
+                        _guard(mesh, d2, fsdp))
+        return spec(_guard(mesh, e, "model"), _guard(mesh, d1, fsdp), None)
+    if len(core) == 2 and name in _COL_NAMES:
+        return spec(_guard(mesh, core[0], fsdp), _guard(mesh, core[1], "model"))
+    if len(core) == 2 and name in _ROW_NAMES:
+        return spec(_guard(mesh, core[0], "model"), _guard(mesh, core[1], fsdp))
+    if len(core) == 2 and name in _REP_NAMES:
+        return spec(_guard(mesh, core[0], fsdp), None)
+    if len(core) == 1 and name in ("bq", "bk", "bv"):
+        return spec(_guard(mesh, core[0], "model"))
+    return spec(*([None] * len(core)))
+
+
+def param_specs(mesh: Mesh, cfg: ArchConfig, params_shape) -> Any:
+    """Map an eval_shape'd param tree to PartitionSpecs."""
+    fsdp = dp_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    specs = [_leaf_spec(mesh, path, leaf, fsdp) for path, leaf in flat]
+    treedef = jax.tree_util.tree_structure(params_shape)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# -- input specs -------------------------------------------------------------
+
+def batch_struct(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one train/prefill batch (weak-type-correct,
+    shardable, no allocation)."""
+    b, s = cell.global_batch, cell.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "patch":
+        s_text = s - cfg.num_patches
+        out["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), ACT_DTYPE)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.frontend == "frames":
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), ACT_DTYPE)
+    return out
+
+
+def batch_specs(mesh: Mesh, cfg: ArchConfig, cell: ShapeCell) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    bdim = cell.global_batch
+    baxes = _guard(mesh, bdim, dp)
+    out = {"tokens": P(baxes, None), "labels": P(baxes, None)}
+    if cfg.frontend == "patch":
+        out["patch_embeds"] = P(baxes, None, None)
+    if cfg.frontend == "frames":
+        out["frames"] = P(baxes, None, None)
+    return out
+
+
+# -- decode (serve) specs ----------------------------------------------------
+
+def decode_structs(cfg: ArchConfig, cell: ShapeCell):
+    """(tokens, pos, caches[, enc_out]) structs for serve_step."""
+    b, s = cell.global_batch, cell.seq_len
+    caches = jax.eval_shape(
+        lambda: M.cache_init(cfg, b, s, dtype=ACT_DTYPE))
+    toks = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    enc = (jax.ShapeDtypeStruct((b, s, cfg.d_model), ACT_DTYPE)
+           if cfg.encoder_layers > 0 else None)
+    return toks, pos, caches, enc
+
+
+def _cache_leaf_spec(mesh: Mesh, leaf, dp) -> P:
+    """Caches: (G, B, S, ...) KV-style or (G, B, ...) state-style.
+    Shard batch over dp when divisible; shard the sequence axis (KV caches)
+    over 'model' (flash-decoding style), else fall back to sharding seq over
+    all axes for batch-1 long-context."""
+    shape = leaf.shape
+    nd = len(shape)
+    if nd >= 3:
+        bdim, sdim = shape[1], shape[2]
+        b_axes = _guard(mesh, bdim, dp)
+        if nd >= 4:  # (G, B, S, H?, d?) — treat dim 2 as sequence
+            if b_axes is not None:
+                s_axes = _guard(mesh, sdim, "model")
+            else:
+                all_ax = dp + ("model",) if isinstance(dp, tuple) \
+                    else (dp, "model")
+                s_axes = _guard(mesh, sdim, all_ax)
+            return P(None, b_axes, s_axes, *([None] * (nd - 3)))
+        # (G, B, D) state
+        return P(None, b_axes, _guard(mesh, sdim, "model"))
+    if nd == 2:
+        return P(None, _guard(mesh, shape[1], dp))
+    return P(*([None] * nd))
+
+
+def cache_specs(mesh: Mesh, cfg: ArchConfig, caches_shape) -> Any:
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    return jax.tree.map(lambda l: _cache_leaf_spec(mesh, l, dp), caches_shape,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def token_specs(mesh: Mesh, cell: ShapeCell) -> Tuple[P, P]:
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    baxes = _guard(mesh, cell.global_batch, dp)
+    return P(baxes, None), P(baxes, None)
+
+
+# -- completion workload specs ----------------------------------------------
+
+def completion_structs(shape: Tuple[int, ...], nnz: int, rank: int,
+                       mesh: Mesh):
+    """SparseTensor + factor ShapeDtypeStructs for the paper's workloads."""
+    from repro.core.sparse_tensor import SparseTensor
+    from repro.core.utils import round_up
+    cap = round_up(nnz, int(mesh.devices.size) * 8)
+    st = SparseTensor(
+        jax.ShapeDtypeStruct((cap, len(shape)), jnp.int32),
+        jax.ShapeDtypeStruct((cap,), jnp.float32),
+        jax.ShapeDtypeStruct((cap,), jnp.bool_),
+        tuple(shape), nnz)
+    factors = [jax.ShapeDtypeStruct((d, rank), jnp.float32) for d in shape]
+    return st, factors
+
+
+def completion_specs(mesh: Mesh, st_shape, factors_shape):
+    from repro.core.sparse_tensor import SparseTensor
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    st_spec = SparseTensor(P(dp, None), P(dp), P(dp),
+                           st_shape.shape, st_shape.nnz, st_shape.sorted_mode)
+    f_specs = [P(None, _guard(mesh, f.shape[1], "model"))
+               for f in factors_shape]
+    return st_spec, f_specs

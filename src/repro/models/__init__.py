@@ -1,0 +1,3 @@
+from repro.models import layers, model, moe, ssm, transformer, xlstm
+
+__all__ = ["layers", "model", "moe", "ssm", "transformer", "xlstm"]

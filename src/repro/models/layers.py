@@ -1,0 +1,437 @@
+"""Transformer layer primitives: norms, RoPE, attention family.
+
+Attention scopes (DESIGN.md §5):
+* global  — full causal; blockwise-streamed (flash-style running-softmax scan
+            over KV chunks) above a sequence threshold so the S×S score
+            matrix is never materialized at 32k+;
+* local   — sliding window W via re-blocking: queries in block b attend to
+            blocks {b−1, b} with an exact window mask (gemma2);
+* chunked — block-diagonal attention within chunks (llama4 iRoPE-style local
+            layers).
+
+Decode paths operate on a KV cache laid out (B, S_cache, KVH, hd); local
+layers keep only a ring buffer of W positions. Logit soft-capping (gemma2)
+and QKV bias (qwen2) are supported. MLA (minicpm3) caches the compressed
+latent instead of full K/V.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec
+
+
+# ---------------------------------------------------------------------------
+# sharding-constraint context (set by launch drivers; no-op by default)
+# ---------------------------------------------------------------------------
+
+_SHARD_CTX: Dict = {"dp": None, "dp_size": 1, "tp": None, "tp_size": 1}
+
+
+def set_sharding_ctx(dp=None, dp_size=1, tp=None, tp_size=1):
+    """Activation-sharding hints: dp = data axes (batch dims), tp = model
+    axis (head/ffn dims). Constraints are applied only where the dim is
+    divisible — this pins XLA to the intended layout and stops it from
+    inventing head-dim shardings when heads don't divide the model axis."""
+    _SHARD_CTX.update(dp=dp, dp_size=dp_size, tp=tp, tp_size=tp_size)
+
+
+def clear_sharding_ctx():
+    _SHARD_CTX.update(dp=None, dp_size=1, tp=None, tp_size=1)
+
+
+def constrain(x: jax.Array, *dims: str) -> jax.Array:
+    """dims per axis: 'dp' | 'tp' | None. No-op when ctx unset or indivisible."""
+    from jax.sharding import PartitionSpec as P
+    if _SHARD_CTX["dp"] is None and _SHARD_CTX["tp"] is None:
+        return x
+    spec = []
+    for d, kind in zip(x.shape, dims):
+        if kind == "dp" and _SHARD_CTX["dp"] and d % _SHARD_CTX["dp_size"] == 0:
+            spec.append(_SHARD_CTX["dp"])
+        elif kind == "tp" and _SHARD_CTX["tp"] and d % _SHARD_CTX["tp_size"] == 0:
+            spec.append(_SHARD_CTX["tp"])
+        else:
+            spec.append(None)
+    spec += [None] * (x.ndim - len(spec))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: (..., S) int32. Rotates the full head dim."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# core softmax attention (dense / blockwise / decode)
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, mask, scale, cap) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Sk,H,hd), mask (B|1, 1, Sq, Sk) bool."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    scores = softcap(scores.astype(jnp.float32), cap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _flash_stream(q, k, v, q_pos, kv_pos, scale, cap, kv_block: int,
+                  window: int = 0, layout: str = "auto"):
+    """Running-softmax streamed attention over KV blocks (causal, optional
+    sliding window, kv positions < 0 treated as invalid).
+
+    Exact; never materializes (Sq, Sk). Memory Θ(Sq·hd + kv_block·Sq).
+    ``layout`` pins the score/accumulator sharding inside the scan ('head' =
+    heads over model axis, 'seq' = query rows over model axis) — without the
+    pin XLA re-shards between layouts every block (all-to-all storms)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    nb = sk // kv_block
+    if layout == "auto":
+        layout = "head" if h % max(_SHARD_CTX["tp_size"], 1) == 0 else "seq"
+    hdim, qdim = ("tp", None) if layout == "head" else (None, "tp")
+
+    def pin(x):  # (b, h, sq, ...) accumulators / scores
+        return constrain(x, "dp", hdim, qdim, None)
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb = blk  # (B, kvb, H, hd), (B, kvb, H, hd), (B, kvb)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32)) * scale
+        s = pin(softcap(s, cap))
+        diff = q_pos[:, None, :, None] - pb[:, None, None, :]
+        mask = (diff >= 0) & (pb[:, None, None, :] >= 0)
+        if window:
+            mask &= diff < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, -1)
+        acc = pin(acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32)))
+        return (m_new, l, acc), None
+
+    kb = k.reshape(b, nb, kv_block, h, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, kv_block, h, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(b, nb, kv_block).transpose(1, 0, 2)
+    init = (constrain(jnp.full((b, h, sq), -1e30, jnp.float32),
+                      "dp", hdim, qdim),
+            constrain(jnp.zeros((b, h, sq), jnp.float32), "dp", hdim, qdim),
+            pin(jnp.zeros((b, h, sq, hd), jnp.float32)))
+    # checkpointed body = flash-attention backward semantics: block scores
+    # are recomputed in the bwd pass instead of being saved per iteration.
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, hd)
+
+
+_FLASH_THRESHOLD = 2048
+
+
+def causal_attention(q, k, v, q_pos, kv_pos, scale, cap,
+                     scope: str = "global", window: int = 4096,
+                     chunk: int = 8192, kv_block: int = 1024) -> jax.Array:
+    """Dispatch over scope; all paths exact. Shapes: q (B,S,H,hd) with
+    k/v already head-repeated to H. Long sequences stream (flash-style);
+    local/chunked scopes re-block so streamed length is O(window|chunk)."""
+    b, s, h, hd = q.shape
+    if scope == "chunked" and s > chunk and s % chunk == 0:
+        nc = s // chunk
+        qc = q.reshape(b * nc, chunk, h, hd)
+        kc = k.reshape(b * nc, chunk, h, hd)
+        vc = v.reshape(b * nc, chunk, h, hd)
+        pc = q_pos.reshape(b * nc, chunk)
+        out = causal_attention(qc, kc, vc, pc, pc, scale, cap, "global",
+                               kv_block=kv_block)
+        return out.reshape(b, s, h, hd)
+    if scope == "local" and s > window and s % window == 0:
+        nb = s // window
+        qb = q.reshape(b, nb, window, h, hd)
+        kb = k.reshape(b, nb, window, h, hd)
+        vb = v.reshape(b, nb, window, h, hd)
+        k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], 1)
+        v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], 1)
+        k2 = jnp.concatenate([k_prev, kb], 2)  # (B, nb, 2W, H, hd)
+        v2 = jnp.concatenate([v_prev, vb], 2)
+        qp = q_pos.reshape(b, nb, window)
+        kp_prev = jnp.where(jnp.arange(nb)[None, :, None] > 0,
+                            qp - window, -jnp.ones_like(qp))
+        kp = jnp.concatenate([kp_prev, qp], 2)
+        out = _flash_stream(qb.reshape(b * nb, window, h, hd),
+                            k2.reshape(b * nb, 2 * window, h, hd),
+                            v2.reshape(b * nb, 2 * window, h, hd),
+                            qp.reshape(b * nb, window),
+                            kp.reshape(b * nb, 2 * window),
+                            scale, cap, min(kv_block, window),
+                            window=window)
+        return out.reshape(b, s, h, hd)
+    if s > _FLASH_THRESHOLD:
+        return _flash_stream(q, k, v, q_pos, kv_pos, scale, cap, kv_block)
+    mask = q_pos[:, None, :, None] >= kv_pos[:, None, None, :]
+    if scope == "local":
+        mask &= (q_pos[:, None, :, None] - kv_pos[:, None, None, :]) < window
+    if scope == "chunked":
+        mask &= (q_pos[:, None, :, None] // chunk) == \
+                (kv_pos[:, None, None, :] // chunk)
+    return _sdpa(q, k, v, mask, scale, cap)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (with cache) — covers gemma2 / qwen2 / llama4 / phi
+# ---------------------------------------------------------------------------
+
+def init_gqa_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    hd = cfg.head_dim_()
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "wq": scale * jax.random.normal(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": scale * jax.random.normal(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": scale * jax.random.normal(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": scale * jax.random.normal(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def gqa_forward(p: Dict, cfg: ArchConfig, spec: BlockSpec, x: jax.Array,
+                pos: jax.Array) -> jax.Array:
+    """Full-sequence forward (train / prefill)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim_()
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    tp_div = cfg.n_heads % max(_SHARD_CTX["tp_size"], 1) == 0 and \
+        cfg.n_kv_heads % max(_SHARD_CTX["tp_size"], 1) == 0 and \
+        not cfg.seq_sharded_residual
+    if tp_div:
+        # tensor-parallel attention: heads over the model axis
+        q = constrain(q, "dp", None, "tp")
+        k = constrain(k, "dp", None, "tp")
+        v = constrain(v, "dp", None, "tp")
+    else:
+        # sequence-parallel attention: query rows over the model axis,
+        # K/V replicated — avoids XLA inventing head-dim shardings when
+        # heads don't divide the axis
+        q = constrain(q, "dp", "tp", None)
+        k = constrain(k, "dp", None, None)
+        v = constrain(v, "dp", None, None)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    out = causal_attention(q, k, v, pos, pos, hd ** -0.5, cfg.attn_softcap,
+                           spec.attn_scope, cfg.local_window, cfg.chunk_size)
+    out = constrain(out, "dp", None, "tp")
+    return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+
+
+def gqa_cache_init(cfg: ArchConfig, spec: BlockSpec, batch: int,
+                   max_len: int, dtype=jnp.float32) -> Dict:
+    size = min(max_len, cfg.local_window) if spec.attn_scope == "local" \
+        else (min(max_len, cfg.chunk_size) if spec.attn_scope == "chunked"
+              else max_len)
+    hd = cfg.head_dim_()
+    shape = (batch, size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full((batch, size), -1, jnp.int32)}
+
+
+def gqa_decode(p: Dict, cfg: ArchConfig, spec: BlockSpec, x: jax.Array,
+               pos: jax.Array, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Single-token decode. x (B, 1, D); pos (B, 1) absolute position.
+    Cache is a ring buffer for local/chunked scopes (exact window semantics
+    via stored absolute positions)."""
+    b, _, d = x.shape
+    hd = cfg.head_dim_()
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = rope(q.reshape(b, 1, cfg.n_heads, hd), pos, cfg.rope_theta)
+    k = rope(k.reshape(b, 1, cfg.n_kv_heads, hd), pos, cfg.rope_theta)
+    v = v.reshape(b, 1, cfg.n_kv_heads, hd)
+    size = cache["k"].shape[1]
+    # synchronized decode: all sequences share the slot (pos[0]); a single
+    # dynamic_update_slice keeps the sharded-cache update SPMD-efficient
+    # (per-batch scatters trigger involuntary rematerialization in the
+    # partitioner). Per-sequence masking still uses the stored positions.
+    slot = pos[0, 0] % size
+    upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
+        buf, new, slot, 1)
+    cache = {"k": upd(cache["k"], k), "v": upd(cache["v"], v),
+             "pos": upd(cache["pos"], pos)}
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kk = _repeat_kv(cache["k"], n_rep)
+    vv = _repeat_kv(cache["v"], n_rep)
+    kv_pos = cache["pos"]
+    mask = (kv_pos >= 0)[:, None, None, :] & \
+           (pos[:, None, :, None] >= kv_pos[:, None, None, :])
+    if spec.attn_scope == "local":
+        mask &= (pos[:, None, :, None] - kv_pos[:, None, None, :]) < cfg.local_window
+    if spec.attn_scope == "chunked":
+        mask &= (pos[:, None, :, None] // cfg.chunk_size) == \
+                (kv_pos[:, None, None, :] // cfg.chunk_size)
+    out = _sdpa(q, kk, vv, mask, hd ** -0.5, cfg.attn_softcap)
+    return out.reshape(b, 1, cfg.n_heads * hd) @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, minicpm3/deepseek style)
+# ---------------------------------------------------------------------------
+
+def init_mla_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": s * jax.random.normal(ks[0], (d, cfg.q_lora_rank), dtype),
+        "wq_b": s * jax.random.normal(ks[1], (cfg.q_lora_rank,
+                                              cfg.n_heads * qd), dtype),
+        "wkv_a": s * jax.random.normal(ks[2], (d, cfg.kv_lora_rank +
+                                               cfg.qk_rope_dim), dtype),
+        "wkv_b": s * jax.random.normal(
+            ks[3], (cfg.kv_lora_rank,
+                    cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)), dtype),
+        "wo": s * jax.random.normal(ks[4], (cfg.n_heads * cfg.v_head_dim, d),
+                                    dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+    }
+
+
+def _mla_qkv(p, cfg: ArchConfig, x, pos):
+    b, s, _ = x.shape
+    h, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], rope(q[..., nd:], pos, cfg.rope_theta)
+    kv = x @ p["wkv_a"]
+    latent = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv[..., None, cfg.kv_lora_rank:], pos, cfg.rope_theta)
+    return q_nope, q_rope, latent, k_rope
+
+
+def _mla_attend(p, cfg: ArchConfig, q_nope, q_rope, latent, k_rope,
+                q_pos, kv_pos, valid_mask=None):
+    b, sq, h = q_nope.shape[:3]
+    nd, vd = cfg.qk_nope_dim, cfg.v_head_dim
+    kvb = p["wkv_b"].reshape(cfg.kv_lora_rank, h, nd + vd)
+    k_nope = jnp.einsum("bsl,lhd->bshd", latent, kvb[..., :nd])
+    v = jnp.einsum("bsl,lhd->bshd", latent, kvb[..., nd:])
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (*k_nope.shape[:3],
+                                           cfg.qk_rope_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    mask = q_pos[:, None, :, None] >= kv_pos[:, None, None, :]
+    if valid_mask is not None:
+        mask &= valid_mask[:, None, None, :]
+    scale = (nd + cfg.qk_rope_dim) ** -0.5
+    out = _sdpa(q, k, v, mask, scale, cfg.attn_softcap)
+    return out.reshape(b, sq, h * vd) @ p["wo"]
+
+
+def mla_forward(p: Dict, cfg: ArchConfig, spec: BlockSpec, x: jax.Array,
+                pos: jax.Array) -> jax.Array:
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, cfg, x, pos)
+    return _mla_attend(p, cfg, q_nope, q_rope, latent,
+                       k_rope[:, :, 0], pos, pos)
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.float32) -> Dict:
+    return {"latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            "pos": jnp.full((batch, max_len), -1, jnp.int32)}
+
+
+def mla_decode(p: Dict, cfg: ArchConfig, spec: BlockSpec, x: jax.Array,
+               pos: jax.Array, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """MLA decode with WEIGHT ABSORPTION (beyond-paper §Perf optimization):
+    instead of decompressing the whole latent cache to K/V every step
+    (Θ(S·L·H·(nd+vd)) flops — the naive path's dominant cost), fold the
+    up-projections into the query/output sides and attend in latent space:
+
+        score_h(u) = (q_nope_h · Wk_hᵀ) · latent_u + q_rope · k_rope_u
+        out_h      = (Σ_u p_u latent_u) · Wv_h
+
+    Θ(S·H·L) flops per step — ~(nd+vd)/2 ≈ 64× fewer for minicpm3."""
+    b = x.shape[0]
+    h, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, cfg, x, pos)
+    slot = pos[0, 0]  # synchronized decode (see gqa_decode)
+    upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
+        buf, new, slot, 1)
+    cache = {"latent": upd(cache["latent"], latent),
+             "k_rope": upd(cache["k_rope"], k_rope[:, :, 0]),
+             "pos": upd(cache["pos"], pos)}
+    kvb = p["wkv_b"].reshape(cfg.kv_lora_rank, h, nd + vd)
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, kvb[..., :nd])  # (B,1,H,L)
+    scores = jnp.einsum("bqhl,bsl->bhqs", q_abs, cache["latent"]) + \
+        jnp.einsum("bqhd,bsd->bhqs", q_rope,
+                   jnp.asarray(cache["k_rope"]))
+    scale = (nd + rd) ** -0.5
+    scores = softcap(scores.astype(jnp.float32) * scale, cfg.attn_softcap)
+    mask = (cache["pos"] >= 0)[:, None, None, :] & \
+        (pos[:, None, :, None] >= cache["pos"][:, None, None, :])
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", probs, cache["latent"])
+    out = jnp.einsum("bqhl,lhd->bqhd", ctx, kvb[..., nd:])
+    out = out.reshape(b, 1, h * vd) @ p["wo"]
+    return out, cache

@@ -1,0 +1,137 @@
+"""FFN and Mixture-of-Experts with sort-based static-capacity dispatch.
+
+The MoE dispatch is a sparse gather→compute→scatter with exactly the sorted-
+segment structure of this paper's hypersparse kernels (DESIGN.md §5): tokens
+are sorted by routed expert, placed into fixed-capacity per-expert buffers
+(static shapes ⇒ SPMD-safe; capacity overflow drops tokens, standard
+capacity-factor semantics), batched through the expert FFNs as one
+(E, C, D) × (E, D, F) einsum, and combined back with router weights. Under
+expert-parallel sharding (E over the model axis) XLA lowers the
+dispatch/undispatch scatters to all-to-alls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _act(kind: str, x_gate: jax.Array, x_lin: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(x_gate) * x_lin
+    if kind == "geglu":
+        return jax.nn.gelu(x_gate) * x_lin
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# dense gated FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {"w_gate": s * jax.random.normal(ks[0], (d, f), dtype),
+            "w_lin": s * jax.random.normal(ks[1], (d, f), dtype),
+            "w_out": f ** -0.5 * jax.random.normal(ks[2], (f, d), dtype)}
+
+
+def ffn_forward(p: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    from repro.models.layers import constrain
+    # pin the per-layer weight slices to their (fsdp, tp) layout inside the
+    # scan body — otherwise the partitioner all-reduces full-size weight
+    # gradients (observed on qwen2: 145 GB/step of f32[8192,29568] ARs).
+    wg = constrain(p["w_gate"], "dp", "tp")
+    wl = constrain(p["w_lin"], "dp", "tp")
+    wo = constrain(p["w_out"], "tp", "dp")
+    return _act(cfg.ffn_kind, x @ wg, x @ wl) @ wo
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def init_moe_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {"router": s * jax.random.normal(ks[0], (d, e), dtype),
+         "w_gate": s * jax.random.normal(ks[1], (e, d, f), dtype),
+         "w_lin": s * jax.random.normal(ks[2], (e, d, f), dtype),
+         "w_out": f ** -0.5 * jax.random.normal(ks[3], (e, f, d), dtype)}
+    if cfg.n_shared_experts:
+        sub = dataclasses.replace(cfg, d_ff=cfg.d_ff * cfg.n_shared_experts)
+        p["shared"] = init_ffn_params(ks[4], sub, dtype)
+    return p
+
+
+def moe_forward(p: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x (B, S, D) → (B, S, D). Top-k routing with sort-based dispatch done
+    PER BATCH ROW (vmap), so the token sort stays device-local under
+    batch-over-data sharding; only the expert einsum crosses the expert-
+    parallel (model) axis — XLA lowers the (B,E,C,D) dispatch/undispatch to
+    all-to-alls. The sorted-segment structure mirrors the paper's sparse
+    kernels (DESIGN.md §5)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(cfg.capacity_factor * s * k / e)
+    cap = max(8, min(cap, s * k))
+
+    def route_row(xf):                               # xf (S, D)
+        logits = xf @ p["router"]                    # (S, E)
+        gates = jax.nn.softmax(logits.astype(jnp.float32), -1)
+        topw, tope = jax.lax.top_k(gates, k)         # (S, k)
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+        flat_e = tope.reshape(-1)                    # (S*k,)
+        flat_t = jnp.repeat(jnp.arange(s), k)
+        flat_w = topw.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+        seg_start = jnp.searchsorted(se, jnp.arange(e))
+        pos_in_e = jnp.arange(s * k) - seg_start[se]
+        keep = pos_in_e < cap
+        buf = jnp.zeros((e, cap, d), xf.dtype)
+        buf = buf.at[se, jnp.where(keep, pos_in_e, cap)].set(
+            xf[st_], mode="drop")
+        return buf, (se, st_, sw, keep, pos_in_e)
+
+    def combine_row(out_buf, meta):
+        se, st_, sw, keep, pos_in_e = meta
+        contrib = out_buf[se, jnp.where(keep, pos_in_e, 0)] * \
+            (sw * keep).astype(out_buf.dtype)[:, None]
+        return jnp.zeros((s, d), out_buf.dtype).at[st_].add(contrib)
+
+    from repro.models.layers import constrain
+    bufs, metas = jax.vmap(route_row)(x)             # (B, E, C, D)
+    # expert-parallel layout pins: dispatch buffers batch-over-dp then
+    # expert-over-tp (the transition is the all-to-all); routing metadata
+    # stays dp-sharded (otherwise the partitioner replicates the sort and
+    # all-reduces its outputs across the model axis).
+    metas = tuple(constrain(m, "dp") for m in metas)
+    bufs = constrain(bufs, "dp", "tp", None, None)
+    h = _act(cfg.ffn_kind,
+             jnp.einsum("becd,edf->becf", bufs, p["w_gate"]),
+             jnp.einsum("becd,edf->becf", bufs, p["w_lin"]))
+    out_bufs = jnp.einsum("becf,efd->becd", h, p["w_out"])
+    out_bufs = constrain(out_bufs, "dp", "tp", None, None)
+    y = jax.vmap(combine_row)(out_bufs, metas)
+    if cfg.n_shared_experts:
+        y = y + ffn_forward(p["shared"], cfg, x.reshape(b * s, d)
+                            ).reshape(b, s, d)
+    return y
+
+
+def moe_aux_loss(p: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Load-balance auxiliary loss (Switch-style): E·Σ_e f_e·P_e."""
+    b, s, d = x.shape
+    logits = x.reshape(-1, d) @ p["router"]
+    gates = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top1 = jnp.argmax(gates, -1)
+    f = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), 0)
+    pmean = jnp.mean(gates, 0)
+    return cfg.n_experts * jnp.sum(f * pmean)

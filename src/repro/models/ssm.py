@@ -1,0 +1,128 @@
+"""Mamba2 (SSD — state-space duality) block, minimal chunked implementation.
+
+Follows the Mamba-2 paper's "minimal SSD" formulation: the selective SSM
+    h_t = exp(A·dt_t)·h_{t-1} + dt_t·B_t x_t ,  y_t = C_tᵀ h_t + D x_t
+is computed chunk-parallel: intra-chunk terms as masked (attention-like)
+matmuls on the MXU, inter-chunk recurrence as a short scan over S/chunk
+states. Exact (up to fp assoc.) — validated against the step-by-step
+recurrent reference in tests. Decode is the single-step recurrence on a
+(B, H, P, N) state cache — O(1) per token, which is why SSD archs run the
+``long_500k`` cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    head_p = 64 if d_in % 64 == 0 else d_in // max(1, d_in // 64)
+    n_heads = d_in // head_p
+    return d_in, n_heads, head_p, cfg.ssm_state
+
+
+def init_mamba2_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    d_in, h, p_dim, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": s * jax.random.normal(ks[0], (d, 2 * d_in + 2 * n + h), dtype),
+        "w_out": d_in ** -0.5 * jax.random.normal(ks[1], (d_in, d), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "norm": jnp.zeros((d_in,), dtype),
+    }
+
+
+def _split_proj(p, cfg, u):
+    d_in, h, p_dim, n = _dims(cfg)
+    proj = u @ p["w_in"]
+    z, x, bmat, cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])          # (..., H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))     # (H,) negative
+    return z, x, bmat, cmat, dt, a
+
+
+def mamba2_forward(p: Dict, cfg: ArchConfig, x_seq: jax.Array) -> jax.Array:
+    """x_seq (B, S, D) → (B, S, D); chunked SSD as ONE scan over chunks —
+    the per-step working set is Θ(B·Q²·H), never Θ(B·S·Q·H)."""
+    b, s, d = x_seq.shape
+    d_in, h, p_dim, n = _dims(cfg)
+    q = min(cfg.ssm_chunk, s)
+    while s % q:          # largest divisor of s not exceeding ssm_chunk
+        q -= 1
+    nc = s // q
+    z, xg, bmat, cmat, dt, a = _split_proj(p, cfg, x_seq)
+    xh = xg.reshape(b, nc, q, h, p_dim).transpose(1, 0, 2, 3, 4)
+    bm = bmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    cm = cmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(hstate, inp):
+        xc, bc, cc, dtk = inp          # (B,Q,H,P) (B,Q,N) (B,Q,N) (B,Q,H)
+        da = dtk * a                                       # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)
+        # intra-chunk attention-like term (double-where: exp never sees the
+        # positive masked-out entries, keeping the gradient finite)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]    # (B,Q,K,H)
+        cmask = causal[None, :, :, None]
+        gmat = jnp.where(cmask, jnp.exp(jnp.where(cmask, decay, 0.0)), 0.0)
+        cb = jnp.einsum("bqn,bkn->bqk", cc, bc).astype(jnp.float32)
+        att = cb[..., None] * gmat * dtk[:, None, :, :]    # (B,Q,K,H)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", att, xc.astype(jnp.float32))
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum("bqh,bqn,bhnp->bqhp",
+                             jnp.exp(cum), cc.astype(jnp.float32), hstate)
+        # state update
+        last = cum[:, -1:, :]
+        w_state = jnp.exp(last - cum) * dtk                # (B,Q,H)
+        new_state = hstate * jnp.exp(last[:, 0])[:, :, None, None] + \
+            jnp.einsum("bqh,bqn,bqhp->bhnp", w_state,
+                       bc.astype(jnp.float32), xc.astype(jnp.float32))
+        return new_state, y_intra + y_inter
+
+    init = jnp.zeros((b, h, n, p_dim), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, init, (xh, bm, cm, dtc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p_dim)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * \
+        xg.reshape(b, s, h, p_dim).astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x_seq.dtype)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def mamba2_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_in, h, p_dim, n = _dims(cfg)
+    return {"state": jnp.zeros((batch, h, n, p_dim), jnp.float32)}
+
+
+def mamba2_decode(p: Dict, cfg: ArchConfig, x_tok: jax.Array,
+                  cache: Dict) -> Tuple[jax.Array, Dict]:
+    """x_tok (B, 1, D); single-step recurrence."""
+    b = x_tok.shape[0]
+    d_in, h, p_dim, n = _dims(cfg)
+    z, xg, bmat, cmat, dt, a = _split_proj(p, cfg, x_tok[:, 0])
+    xh = xg.reshape(b, h, p_dim).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)                            # (B,H)
+    dec = jnp.exp(dtf * a)                                  # (B,H)
+    state = cache["state"] * dec[:, :, None, None] + \
+        jnp.einsum("bh,bn,bhp->bhnp", dtf, bmat.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), state)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, d_in).astype(x_tok.dtype)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return (y @ p["w_out"])[:, None], {"state": state}

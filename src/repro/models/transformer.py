@@ -1,0 +1,237 @@
+"""Composable decoder/encoder stacks over a uniform Block protocol.
+
+A model is ``n_groups`` repetitions of a static layer *group* (e.g. gemma2:
+(local attn, global attn); zamba2: (mamba2 ×5, shared attn); xlstm:
+(mlstm, slstm)). Parameters are stacked over groups and the stack runs as a
+single ``lax.scan`` (with optional remat) — one compiled group body
+regardless of depth, which keeps dry-run compiles fast and HLO small; the
+roofline parser multiplies by the known trip count (DESIGN.md §6).
+
+Block kinds: "attn" (GQA or MLA per config), "mamba2", "mlstm", "slstm".
+Shared blocks (zamba2) hold one parameter set applied every group, with
+per-application KV caches stacked over groups. Decoder blocks grow a
+cross-attention sub-block in encoder-decoder configs (whisper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def _is_moe(cfg: ArchConfig) -> bool:
+    return cfg.n_experts > 0
+
+
+def init_block_params(key, cfg: ArchConfig, spec: BlockSpec,
+                      cross_attn: bool = False, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if spec.kind == "attn":
+        p["attn"] = (L.init_mla_params(ks[0], cfg, dtype)
+                     if cfg.attn_kind == "mla"
+                     else L.init_gqa_params(ks[0], cfg, dtype))
+        if cfg.ffn_kind != "none" and cfg.d_ff > 0:
+            p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+            p["ffn"] = (M.init_moe_params(ks[1], cfg, dtype) if _is_moe(cfg)
+                        else M.init_ffn_params(ks[1], cfg, dtype))
+    elif spec.kind == "mamba2":
+        p["inner"] = S.init_mamba2_params(ks[0], cfg, dtype)
+    elif spec.kind == "mlstm":
+        p["inner"] = X.init_mlstm_params(ks[0], cfg, dtype)
+    elif spec.kind == "slstm":
+        p["inner"] = X.init_slstm_params(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.kind)
+    if cross_attn:
+        p["norm_x"] = jnp.zeros((cfg.d_model,), dtype)
+        p["cross"] = L.init_gqa_params(ks[2], cfg, dtype)
+    return p
+
+
+def block_forward(p: Dict, cfg: ArchConfig, spec: BlockSpec, x: jax.Array,
+                  pos: jax.Array, enc_out: Optional[jax.Array] = None,
+                  causal: bool = True) -> jax.Array:
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if cfg.attn_kind == "mla":
+            x = x + L.mla_forward(p["attn"], cfg, spec, h, pos)
+        else:
+            x = x + (L.gqa_forward(p["attn"], cfg, spec, h, pos) if causal
+                     else _bidir_attn(p["attn"], cfg, h, pos))
+        if "cross" in p and enc_out is not None:
+            hx = L.rms_norm(x, p["norm_x"], cfg.norm_eps)
+            x = x + _cross_attn(p["cross"], cfg, hx, enc_out)
+        if "ffn" in p:
+            h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+            x = x + (M.moe_forward(p["ffn"], cfg, h2) if _is_moe(cfg)
+                     else M.ffn_forward(p["ffn"], cfg, h2))
+        return x
+    if spec.kind == "mamba2":
+        return x + S.mamba2_forward(p["inner"], cfg, h)
+    if spec.kind == "mlstm":
+        return x + X.mlstm_forward(p["inner"], cfg, h)
+    if spec.kind == "slstm":
+        return x + X.slstm_forward(p["inner"], cfg, h)
+    raise ValueError(spec.kind)
+
+
+def _bidir_attn(p, cfg: ArchConfig, x, pos):
+    b, s, d = x.shape
+    hd = cfg.head_dim_()
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q, k = L.rope(q, pos, cfg.rope_theta), L.rope(k, pos, cfg.rope_theta)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = L._repeat_kv(k, rep), L._repeat_kv(v, rep)
+    mask = jnp.ones((b, 1, s, s), bool)
+    out = L._sdpa(q, k, v, mask, hd ** -0.5, cfg.attn_softcap)
+    return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+
+
+def _cross_attn(p, cfg: ArchConfig, x, enc_out):
+    b, s, d = x.shape
+    se = enc_out.shape[1]
+    hd = cfg.head_dim_()
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (enc_out @ p["wk"]).reshape(b, se, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(b, se, cfg.n_kv_heads, hd)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = L._repeat_kv(k, rep), L._repeat_kv(v, rep)
+    mask = jnp.ones((b, 1, s, se), bool)
+    out = L._sdpa(q, k, v, mask, hd ** -0.5, 0.0)
+    return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+
+
+def block_cache_init(cfg: ArchConfig, spec: BlockSpec, batch: int,
+                     max_len: int, dtype=jnp.float32) -> Dict:
+    if spec.kind == "attn":
+        if cfg.attn_kind == "mla":
+            return L.mla_cache_init(cfg, batch, max_len, dtype)
+        return L.gqa_cache_init(cfg, spec, batch, max_len, dtype)
+    if spec.kind == "mamba2":
+        return S.mamba2_cache_init(cfg, batch, dtype)
+    if spec.kind == "mlstm":
+        return X.mlstm_cache_init(cfg, batch)
+    if spec.kind == "slstm":
+        return X.slstm_cache_init(cfg, batch, dtype)
+    raise ValueError(spec.kind)
+
+
+def block_decode(p: Dict, cfg: ArchConfig, spec: BlockSpec, x: jax.Array,
+                 pos: jax.Array, cache: Dict,
+                 enc_out: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Dict]:
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if cfg.attn_kind == "mla":
+            y, cache = L.mla_decode(p["attn"], cfg, spec, h, pos, cache)
+        else:
+            y, cache = L.gqa_decode(p["attn"], cfg, spec, h, pos, cache)
+        x = x + y
+        if "cross" in p and enc_out is not None:
+            hx = L.rms_norm(x, p["norm_x"], cfg.norm_eps)
+            x = x + _cross_attn(p["cross"], cfg, hx, enc_out)
+        if "ffn" in p:
+            h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+            x = x + (M.moe_forward(p["ffn"], cfg, h2) if _is_moe(cfg)
+                     else M.ffn_forward(p["ffn"], cfg, h2))
+        return x, cache
+    if spec.kind == "mamba2":
+        y, cache = S.mamba2_decode(p["inner"], cfg, h, cache)
+    elif spec.kind == "mlstm":
+        y, cache = X.mlstm_decode(p["inner"], cfg, h, cache)
+    elif spec.kind == "slstm":
+        y, cache = X.slstm_decode(p["inner"], cfg, h, cache)
+    else:
+        raise ValueError(spec.kind)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def init_stack_params(key, cfg: ArchConfig, cross_attn: bool = False,
+                      dtype=jnp.float32) -> Dict:
+    """Stacked group params: blocks[slot] has leaves (n_groups, ...)."""
+    g = cfg.n_groups
+    blocks: List[Any] = []
+    shared = None
+    for slot, spec in enumerate(cfg.group):
+        if spec.shared:
+            shared = init_block_params(jax.random.fold_in(key, 1000 + slot),
+                                       cfg, spec, cross_attn, dtype)
+            blocks.append(None)
+            continue
+        ks = jax.random.split(jax.random.fold_in(key, slot), g)
+        per = [init_block_params(k, cfg, spec, cross_attn, dtype) for k in ks]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return {"blocks": blocks, "shared": shared}
+
+
+def stack_forward(params: Dict, cfg: ArchConfig, x: jax.Array,
+                  pos: jax.Array, enc_out: Optional[jax.Array] = None,
+                  causal: bool = True, remat: bool = True) -> jax.Array:
+    specs = cfg.group
+    scanned = tuple(b for b in params["blocks"] if b is not None)
+
+    res_spec = ("dp", "tp", None) if cfg.seq_sharded_residual \
+        else ("dp", None, None)
+
+    def group_body(x, slices):
+        it = iter(slices)
+        for spec, stacked in zip(specs, params["blocks"]):
+            p = params["shared"] if stacked is None else next(it)
+            x = block_forward(p, cfg, spec, x, pos, enc_out, causal)
+            x = L.constrain(x, *res_spec)
+        return x, None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    x, _ = jax.lax.scan(body, x, scanned)
+    return x
+
+
+def stack_cache_init(cfg: ArchConfig, batch: int, max_len: int,
+                     dtype=jnp.float32) -> Tuple:
+    """Caches stacked over groups for every slot (incl. shared slots)."""
+    g = cfg.n_groups
+    caches = []
+    for spec in cfg.group:
+        one = block_cache_init(cfg, spec, batch, max_len, dtype)
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (g, *x.shape)).copy(), one))
+    return tuple(caches)
+
+
+def stack_decode(params: Dict, cfg: ArchConfig, x: jax.Array, pos: jax.Array,
+                 caches: Tuple, enc_out: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Tuple]:
+    specs = cfg.group
+
+    def group_body(x, slices_and_caches):
+        slices, caches_g = slices_and_caches
+        it = iter(slices)
+        new_caches = []
+        for slot, (spec, stacked) in enumerate(zip(specs, params["blocks"])):
+            p = params["shared"] if stacked is None else next(it)
+            x, c = block_decode(p, cfg, spec, x, pos, caches_g[slot], enc_out)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    scanned = tuple(b for b in params["blocks"] if b is not None)
+    x, new_caches = jax.lax.scan(group_body, x, (scanned, caches))
+    return x, new_caches

@@ -1,0 +1,245 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent), with exponential gating and
+the paper's max-state stabilization.
+
+Both are implemented as exact recurrences via ``lax.scan`` over time (one
+compiled body regardless of sequence length); the chunkwise-parallel mLSTM
+form is a §Perf candidate, not needed for correctness. Decode is the same
+step function on a carried state — O(1) per token, so xlstm runs the
+``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rms_norm
+
+
+def _hd(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix memory C (H, hd_k, hd_v), exp input gate, sig forget gate
+# ---------------------------------------------------------------------------
+
+def init_mlstm_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, _hd(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq": s * jax.random.normal(ks[0], (d, h * hd), dtype),
+        "wk": s * jax.random.normal(ks[1], (d, h * hd), dtype),
+        "wv": s * jax.random.normal(ks[2], (d, h * hd), dtype),
+        "w_gates": s * jax.random.normal(ks[3], (d, 2 * h), dtype),
+        "b_gates": jnp.concatenate([jnp.zeros((h,), dtype),
+                                    3.0 * jnp.ones((h,), dtype)]),
+        "wo": s * jax.random.normal(ks[4], (h * hd, d), dtype),
+        "norm": jnp.zeros((h * hd,), dtype),
+    }
+
+
+def _mlstm_step(carry, qkvif, hd):
+    c, nrm, mstab = carry            # (B,H,hdk,hdv), (B,H,hdk), (B,H)
+    q, k, v, i_pre, f_pre = qkvif    # (B,H,hd) ×3, (B,H) ×2
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + mstab, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + mstab - m_new)
+    c = f_g[..., None, None] * c + i_g[..., None, None] * \
+        (k[..., :, None] * v[..., None, :])
+    nrm = f_g[..., None] * nrm + i_g[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, nrm)),
+                      jnp.exp(-m_new))
+    out = num / den[..., None]
+    return (c, nrm, m_new), out
+
+
+def _mlstm_qkvif(p, cfg, x):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, _hd(cfg)
+    q = (x @ p["wq"]).reshape(b, s, h, hd) * hd ** -0.5
+    k = (x @ p["wk"]).reshape(b, s, h, hd) * hd ** -0.5
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    gates = (x @ p["w_gates"] + p["b_gates"]).astype(jnp.float32)
+    i_pre, f_pre = gates[..., :h], gates[..., h:]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_forward(p: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.xlstm_chunk and x.shape[1] % cfg.xlstm_chunk == 0 \
+            and x.shape[1] > cfg.xlstm_chunk:
+        return _mlstm_forward_chunked(p, cfg, x, cfg.xlstm_chunk)
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, _hd(cfg)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, cfg, x)
+    xs = tuple(a.transpose(1, 0, 2, 3) if a.ndim == 4 else a.transpose(1, 0, 2)
+               for a in (q, k, v, i_pre, f_pre))
+    init = (jnp.zeros((b, h, hd, hd), jnp.float32),
+            jnp.zeros((b, h, hd), jnp.float32),
+            -jnp.inf * jnp.ones((b, h), jnp.float32))
+    step = lambda c, inp: _mlstm_step(
+        c, tuple(a.astype(jnp.float32) for a in inp), hd)
+    _, ys = jax.lax.scan(step, init, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, h * hd).astype(x.dtype)
+    return rms_norm(y, p["norm"], cfg.norm_eps) @ p["wo"]
+
+
+def _mlstm_forward_chunked(p: Dict, cfg: ArchConfig, x: jax.Array,
+                           q_chunk: int) -> jax.Array:
+    """Chunkwise-parallel mLSTM (§Perf optimization): intra-chunk terms as
+    decay-masked matmuls on the MXU, inter-chunk recurrence as a scan over
+    S/chunk matrix-memory states — the SSD-style schedule applied to mLSTM.
+    Exact up to the running-max stabilizer, which is applied per chunk
+    (log-gates accumulate in f32; validated against the recurrent reference
+    in tests). Per-step work Θ(B·Q²·H) on the MXU vs Θ(S) sequential steps.
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, _hd(cfg)
+    nc = s // q_chunk
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, cfg, x)
+    qc = q.reshape(b, nc, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nc, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    ic = i_pre.reshape(b, nc, q_chunk, h).transpose(1, 0, 2, 3)
+    fc = f_pre.reshape(b, nc, q_chunk, h).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((q_chunk, q_chunk), bool))
+
+    def chunk_step(carry, inp):
+        # carry: scaled state  C = exp(M_s)·c̃ ,  n = exp(M_s)·ñ
+        cmat, nvec, m_s = inp_c = carry
+        qb, kb, vb, ib, fb = inp
+        qb = qb.astype(jnp.float32)
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(fb)            # (B,Q,H)
+        cumf = jnp.cumsum(logf, axis=1)          # F_t (includes t)
+        a_u = ib - cumf                          # i_u − F_u (chunk-local)
+        m_chunk = jax.lax.cummax(a_u, axis=1)    # running max of a_u
+        m_t = jnp.maximum(m_chunk, m_s[:, None, :])   # (B,Q,H) global stab.
+        # intra-chunk: coefficient exp(F_t − F_u + i_u − (F_t + m_t))
+        #            = exp(a_u − m_t)
+        dec = a_u[:, None, :, :] - m_t[:, :, None, :]
+        cmask = causal[None, :, :, None]
+        gmat = jnp.where(cmask, jnp.exp(jnp.where(cmask, dec, 0.0)), 0.0)
+        att = jnp.einsum("bqhd,bkhd->bqkh", qb, kb) * gmat
+        y_intra = jnp.einsum("bqkh,bkhd->bqhd", att, vb)
+        n_intra = jnp.einsum("bqkh,bkhd->bqhd", gmat, kb)
+        # inter-chunk: C contribution scaled exp(F_t) (u ≤ chunk start);
+        # stabilized coefficient exp(M_s − m_t)  (C̃ already /exp(M_s))
+        inter_w = jnp.exp(m_s[:, None, :] - m_t)      # (B,Q,H)
+        y_inter = jnp.einsum("bqh,bqhk,bhkv->bqhv", inter_w, qb, cmat)
+        n_inter = jnp.einsum("bqh,bhk->bqhk", inter_w, nvec)
+        num = y_intra + y_inter
+        den = jnp.abs(jnp.einsum("bqhk,bqhk->bqh", qb, n_intra + n_inter))
+        # global m at position t is F_t + m_t; out denominator floor exp(−m)
+        floor = jnp.exp(-(cumf + m_t))
+        out = num / jnp.maximum(den, floor)[..., None]
+        # state update. Invariant: μ = max_u a_u in the NEXT chunk's local
+        # frame; frames shift by f_tot (= F at chunk end) between chunks:
+        #   a^frame(c+1) = a^frame(c) + f_tot.
+        f_tot = cumf[:, -1]                      # (B,H)
+        m_end = jnp.maximum(m_s, m_chunk[:, -1])     # frame-c max
+        scale_old = jnp.exp(m_s - m_end)
+        w_u = jnp.exp(a_u - m_end[:, None])          # exp(a_u − M_end)
+        c_new = scale_old[:, :, None, None] * cmat + \
+            jnp.einsum("bqh,bqhk,bqhv->bhkv", w_u, kb, vb)
+        n_new = scale_old[:, :, None] * nvec + \
+            jnp.einsum("bqh,bqhk->bhk", w_u, kb)
+        m_new = m_end + f_tot                        # re-expressed in c+1
+        return (c_new, n_new, m_new), out
+
+    init = (jnp.zeros((b, h, hd, hd), jnp.float32),
+            jnp.zeros((b, h, hd), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    _, ys = jax.lax.scan(chunk_step, init, (qc, kc, vc, ic, fc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h * hd).astype(x.dtype)
+    return rms_norm(y, p["norm"], cfg.norm_eps) @ p["wo"]
+
+
+def mlstm_cache_init(cfg: ArchConfig, batch: int) -> Dict:
+    h, hd = cfg.n_heads, _hd(cfg)
+    return {"c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": -jnp.inf * jnp.ones((batch, h), jnp.float32)}
+
+
+def mlstm_decode(p: Dict, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    h, hd = cfg.n_heads, _hd(cfg)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, cfg, x)
+    carry = (cache["c"], cache["n"], cache["m"])
+    inp = tuple(a[:, 0].astype(jnp.float32) for a in (q, k, v, i_pre, f_pre))
+    (c, nrm, m), out = _mlstm_step(carry, inp, hd)
+    y = out.reshape(b, 1, h * hd).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) @ p["wo"]
+    return y, {"c": c, "n": nrm, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory per head-unit, exp gating with stabilizer state
+# ---------------------------------------------------------------------------
+
+def init_slstm_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    # fused [z, i, f, o] projections
+    return {"w": s * jax.random.normal(ks[0], (d, 4 * d), dtype),
+            "r": s * jax.random.normal(ks[1], (d, 4 * d), dtype),
+            "b": jnp.concatenate([jnp.zeros((d,), dtype),
+                                  jnp.zeros((d,), dtype),
+                                  3.0 * jnp.ones((d,), dtype),
+                                  jnp.zeros((d,), dtype)]),
+            "wo": s * jax.random.normal(ks[2], (d, d), dtype),
+            "norm": jnp.zeros((d,), dtype)}
+
+
+def _slstm_step(p, cfg, carry, wx):
+    c, nrm, m, y_prev = carry
+    d = cfg.d_model
+    pre = (wx + y_prev @ p["r"] + p["b"]).astype(jnp.float32)
+    z, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z)
+    nrm = f_g * nrm + i_g
+    hval = jax.nn.sigmoid(o_pre) * c / jnp.maximum(nrm, 1.0)
+    return (c, nrm, m_new, hval.astype(wx.dtype)), hval
+
+
+def slstm_forward(p: Dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    wx = (x @ p["w"]).transpose(1, 0, 2)      # (S, B, 4D)
+    init = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+            -jnp.inf * jnp.ones((b, d), jnp.float32),
+            jnp.zeros((b, d), x.dtype))
+    step = lambda c, inp: _slstm_step(p, cfg, c, inp)
+    _, ys = jax.lax.scan(step, init, wx)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    return rms_norm(y, p["norm"], cfg.norm_eps) @ p["wo"]
+
+
+def slstm_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": -jnp.inf * jnp.ones((batch, d), jnp.float32),
+            "y": jnp.zeros((batch, d), dtype)}
+
+
+def slstm_decode(p: Dict, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict) -> Tuple[jax.Array, Dict]:
+    wx = (x @ p["w"])[:, 0]
+    carry = (cache["c"], cache["n"], cache["m"], cache["y"])
+    (c, nrm, m, yc), h = _slstm_step(p, cfg, carry, wx)
+    y = rms_norm(h[:, None].astype(x.dtype), p["norm"], cfg.norm_eps) @ p["wo"]
+    return y, {"c": c, "n": nrm, "m": m, "y": yc}

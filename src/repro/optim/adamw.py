@@ -1,0 +1,45 @@
+"""AdamW, hand-rolled (no optax in this container), pytree-generic.
+
+Optimizer state shards like the parameters (the caller's shardings flow
+through pjit); used by both the LM train driver and as an option for the
+generalized-loss completion path."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    count = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v +
+                      (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+    bc1 = 1 - b1 ** count
+    bc2 = 1 - b2 ** count
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        return (p.astype(jnp.float32) - lr * (step + weight_decay * p)
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu, nu, count)

@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import RestartableLoop, StepWatchdog
+from repro.runtime.elastic import replan_sparse, replan_dense
+
+__all__ = ["RestartableLoop", "StepWatchdog", "replan_sparse", "replan_dense"]

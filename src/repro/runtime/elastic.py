@@ -1,0 +1,48 @@
+"""Elastic scaling: re-plan a checkpointed job for a different device count.
+
+Checkpoints are mesh-independent logical arrays (repro.checkpoint), so
+elasticity reduces to re-partitioning at restore:
+
+* dense state (factor matrices, LM params): device_put with the new mesh's
+  shardings — no data transformation needed;
+* sparse datasets: nonzero shards must be re-balanced to the new shard count
+  (capacity is padded to the new multiple, entries re-shuffled so each new
+  shard is equally loaded).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sparse_tensor import SparseTensor
+from repro.data.synthetic import shuffle_and_pad
+from repro.sparse.redistribute import shard_nonzeros
+
+
+def replan_sparse(st: SparseTensor, key, mesh: Optional[Mesh],
+                  data_axes=("data",)) -> SparseTensor:
+    """Re-balance a sparse dataset for a new mesh (or None ⇒ single device)."""
+    num = 1
+    if mesh is not None:
+        import numpy as np
+        num = int(np.prod([mesh.shape[a] for a in data_axes]))
+    out = shuffle_and_pad(st, key, num)
+    if mesh is not None:
+        axes = data_axes if len(data_axes) > 1 else data_axes[0]
+        out = shard_nonzeros(out, mesh, axes)
+    return out
+
+
+def replan_dense(tree, mesh: Optional[Mesh], spec_fn=None):
+    """Re-shard dense state onto a new mesh; spec_fn(path-str, leaf) -> P."""
+    if mesh is None:
+        return tree
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for (path, leaf), raw in zip(flat[0], leaves):
+        spec = spec_fn("/".join(map(str, path)), leaf) if spec_fn else P()
+        out.append(jax.device_put(raw, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

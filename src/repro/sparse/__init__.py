@@ -1,0 +1,5 @@
+from repro.sparse.ccsr import CCSRView, RowBlockBuckets, build_ccsr, bucketize
+from repro.sparse import ops, redistribute
+
+__all__ = ["CCSRView", "RowBlockBuckets", "build_ccsr", "bucketize", "ops",
+           "redistribute"]

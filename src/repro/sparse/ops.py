@@ -1,0 +1,171 @@
+"""Sparse×dense contraction paths and hypersparse block summation.
+
+Implements the paper's §3.1 kernel set, TPU-adapted:
+
+* TTM (tensor-times-matrix) with three output representations, mirroring
+  Fig. 5a: fully-dense, sparse-input/dense-output, and hypersparse
+  (sparse-input/sparse-output with compressed keys);
+* all-at-once and pairwise MTTKRP (Fig. 5b);
+* summation of sparse blocks with *different* patterns (union pattern), the
+  local kernel of the paper's butterfly sparse reduction (Fig. 1).
+
+All functions are jit-compatible with static capacities.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_tensor import SparseTensor
+from repro.core.utils import lex_sort_perm, linearize, rows_equal
+
+
+def _other_modes(ndim: int, mode: int) -> List[int]:
+    return [d for d in range(ndim) if d != mode]
+
+
+# ---------------------------------------------------------------------------
+# TTM: z_{i..r} = sum_k t_{i..k..} w_{kr}
+# ---------------------------------------------------------------------------
+
+def ttm_dense_output(st: SparseTensor, w: jax.Array, mode: int) -> jax.Array:
+    """Sparse input, dense output: scatter-add into the full dense tensor.
+
+    Memory Θ(Π_{d≠mode} I_d · R): fast while it fits (paper Fig. 5a 'sparse,
+    dense output' variant)."""
+    others = _other_modes(st.ndim, mode)
+    contrib = (st.values * st.mask)[:, None] * w[st.indices[:, mode]]  # (cap, R)
+    out_shape = tuple(st.shape[d] for d in others) + (w.shape[1],)
+    out = jnp.zeros(out_shape, contrib.dtype)
+    return out.at[tuple(st.indices[:, d] for d in others)].add(contrib)
+
+
+def ttm_hypersparse(st: SparseTensor, w: jax.Array, mode: int) -> SparseTensor:
+    """Sparse input, *sparse* output over compressed uncontracted keys.
+
+    This is the hypersparse path: output entries exist only for observed
+    (uncontracted) key combinations — Θ(m) storage with a trailing dense R
+    axis, never Θ(Π I_d). Implementation: sort by the merged key, identify
+    unique keys (CCSR compression), segment-sum contributions."""
+    others = _other_modes(st.ndim, mode)
+    key_shape = tuple(st.shape[d] for d in others)
+    perm = lex_sort_perm(st.indices, st.mask, others)
+    idx_s = st.indices[perm]
+    contrib = ((st.values * st.mask)[:, None] * w[st.indices[:, mode]])[perm]
+    keys_s = idx_s[:, others]
+    prev = jnp.concatenate([jnp.full((1, len(others)), -1, keys_s.dtype),
+                            keys_s[:-1]], axis=0)
+    mask_s = st.mask[perm]
+    is_start = ~rows_equal(keys_s, prev) & mask_s
+    crow = jnp.cumsum(is_start) - 1
+    cap = st.cap
+    out_vals = jax.ops.segment_sum(contrib, jnp.where(mask_s, crow, cap),
+                                   num_segments=cap + 1)[:cap]
+    out_idx = jnp.zeros((cap, len(others)), jnp.int32)
+    safe = jnp.where(is_start, crow, cap)
+    out_idx = out_idx.at[safe].set(idx_s[:, others], mode="drop")
+    n_unique = jnp.sum(is_start)
+    out_valid = jnp.arange(cap) < n_unique
+    out_vals = jnp.where(out_valid[:, None], out_vals, 0)
+    return SparseTensor(out_idx, out_vals, out_valid, key_shape,
+                        sorted_mode=None)
+
+
+def ttm_fully_dense(t_dense: jax.Array, w: jax.Array, mode: int) -> jax.Array:
+    """Dense baseline (paper Fig. 5a 'dense' variant)."""
+    t_moved = jnp.moveaxis(t_dense, mode, -1)
+    return jnp.einsum("...k,kr->...r", t_moved, w)
+
+
+# ---------------------------------------------------------------------------
+# MTTKRP: y_{ir} = sum_{jk} t_{ijk} v_{jr} w_{kr}  (order-N generalization)
+# ---------------------------------------------------------------------------
+
+def mttkrp(st: SparseTensor, factors: Sequence[jax.Array], mode: int) -> jax.Array:
+    """All-at-once MTTKRP via gather → product → segment-sum (Θ(mR) work,
+    no Θ(mR)-sized *persistent* intermediate; the jnp fallback materializes a
+    transient (cap, R) product, the Pallas kernel does not)."""
+    others = _other_modes(st.ndim, mode)
+    prod = (st.values * st.mask)[:, None]
+    for d in others:
+        prod = prod * factors[d][st.indices[:, d]]
+    return jax.ops.segment_sum(prod, st.indices[:, mode],
+                               num_segments=st.shape[mode])
+
+
+def mttkrp_pairwise_t_first(st: SparseTensor, factors: Sequence[jax.Array],
+                            mode: int) -> jax.Array:
+    """Pairwise path contracting T with one factor first (hypersparse
+    intermediate), then the rest — paper Fig. 5b 'contract with T first'."""
+    others = _other_modes(st.ndim, mode)
+    last = others[-1]
+    z = ttm_hypersparse(st, factors[last], last)  # keys = modes except `last`
+    rem = [d for d in range(st.ndim) if d not in (mode, last)]
+    prod = z.values
+    key_modes = _other_modes(st.ndim, last)  # z's key axes, in order
+    for d in rem:
+        col = key_modes.index(d)
+        prod = prod * factors[d][z.indices[:, col]]
+    out_col = key_modes.index(mode)
+    return jax.ops.segment_sum(prod, z.indices[:, out_col],
+                               num_segments=st.shape[mode])
+
+
+def mttkrp_pairwise_kr_first(st: SparseTensor, factors: Sequence[jax.Array],
+                             mode: int) -> jax.Array:
+    """Pairwise path forming the Khatri-Rao product first (dense Θ(Π I_d · R)
+    intermediate) — efficient only for relatively dense tensors (paper §5.3)."""
+    others = _other_modes(st.ndim, mode)
+    kr = factors[others[0]]
+    for d in others[1:]:
+        kr = (kr[:, None, :] * factors[d][None, :, :]).reshape(-1, kr.shape[-1])
+    key_shape = tuple(st.shape[d] for d in others)
+    key = linearize(st.indices[:, others], key_shape)
+    contrib = (st.values * st.mask)[:, None] * kr[key]
+    return jax.ops.segment_sum(contrib, st.indices[:, mode],
+                               num_segments=st.shape[mode])
+
+
+# ---------------------------------------------------------------------------
+# Hypersparse block summation (union of patterns) — paper Fig. 1 local kernel
+# ---------------------------------------------------------------------------
+
+def sparse_add_union(a: SparseTensor, b: SparseTensor) -> SparseTensor:
+    """Sum two sparse tensors with (possibly) different patterns.
+
+    Static output capacity = a.cap + b.cap; duplicate coordinates are merged
+    by sorted-segment summation (the TPU analogue of the paper's dense-buffer
+    row merge)."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    idx = jnp.concatenate([a.indices, b.indices], axis=0)
+    vals = jnp.concatenate([a.values * a.mask, b.values * b.mask], axis=0)
+    mask = jnp.concatenate([a.mask, b.mask], axis=0)
+    cap = idx.shape[0]
+    perm = lex_sort_perm(idx, mask, range(idx.shape[1]))
+    idx_s, vals_s, mask_s = idx[perm], vals[perm], mask[perm]
+    prev = jnp.concatenate([jnp.full((1, idx.shape[1]), -1, idx_s.dtype),
+                            idx_s[:-1]], axis=0)
+    is_start = ~rows_equal(idx_s, prev) & mask_s
+    crow = jnp.cumsum(is_start) - 1
+    out_vals = jax.ops.segment_sum(vals_s, jnp.where(mask_s, crow, cap),
+                                   num_segments=cap + 1)[:cap]
+    out_idx = jnp.zeros((cap, a.indices.shape[1]), jnp.int32)
+    out_idx = out_idx.at[jnp.where(is_start, crow, cap)].set(idx_s, mode="drop")
+    n_unique = jnp.sum(is_start)
+    out_valid = jnp.arange(cap) < n_unique
+    out_vals = jnp.where(out_valid, out_vals, 0)
+    return SparseTensor(out_idx, out_vals, out_valid, a.shape,
+                        sorted_mode=None)
+
+
+# ---------------------------------------------------------------------------
+# SDDMM — TTTP with N=2 (paper §3.2): X = S ⊙ (U Vᵀ)
+# ---------------------------------------------------------------------------
+
+def sddmm(s: SparseTensor, u: jax.Array, v: jax.Array) -> SparseTensor:
+    assert s.ndim == 2
+    ii, jj = s.indices[:, 0], s.indices[:, 1]
+    out = s.values * jnp.sum(u[ii] * v[jj], axis=-1)
+    return s.with_values(out)

@@ -1,0 +1,69 @@
+"""Distributed redistribution of sparse/dense tensors (paper Fig. 4).
+
+Cyclops' redistribution moves tensor data between processor-grid mappings; the
+JAX analogue is resharding between ``NamedSharding``s (XLA emits the
+collective-permute/all-to-all schedule). We expose the paper's benchmarked
+operations — transpose and reshape of sparse and dense distributed tensors —
+plus the shard-boundary rebalancing used after transposition (a transposed
+sparse tensor is no longer sorted/balanced by its new leading mode).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sparse_tensor import SparseTensor
+from repro.core.utils import lex_sort_perm
+
+
+def shard_nonzeros(st: SparseTensor, mesh: Mesh, axes) -> SparseTensor:
+    """Place a SparseTensor with nonzeros sharded over mesh ``axes`` (paper's
+    distribution of observed entries). Capacity must divide the axis size —
+    callers pad via ``SparseTensor.from_coo(pad_multiple=...)``."""
+    sharding_idx = NamedSharding(mesh, P(axes, None))
+    sharding_1d = NamedSharding(mesh, P(axes))
+    sharding_val = (sharding_1d if st.values.ndim == 1
+                    else NamedSharding(mesh, P(axes, None)))
+    return SparseTensor(jax.device_put(st.indices, sharding_idx),
+                        jax.device_put(st.values, sharding_val),
+                        jax.device_put(st.valid, sharding_1d),
+                        st.shape, st.nnz, st.sorted_mode)
+
+
+def replicate(x: jax.Array, mesh: Mesh) -> jax.Array:
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def transpose_distributed(st: SparseTensor, perm: Sequence[int],
+                          resort: bool = True) -> SparseTensor:
+    """Distributed sparse transpose: permute index columns then (optionally)
+    globally re-sort by the new leading mode so downstream CCSR views and
+    shard balance hold. The global sort is the redistribution step Cyclops
+    performs; under jit XLA lowers it to a distributed sort."""
+    out = st.transpose(perm)
+    if resort:
+        p = lex_sort_perm(out.indices, out.mask, range(out.ndim))
+        out = SparseTensor(out.indices[p], out.values[p], out.valid[p],
+                           out.shape, out.nnz, sorted_mode=0)
+    return out
+
+
+def reshape_distributed(st: SparseTensor, new_shape: Sequence[int],
+                        resort: bool = True) -> SparseTensor:
+    """Distributed sparse reshape preserving global row-major order (paper
+    notes order preservation makes this cheaper than transpose)."""
+    out = st.reshape(new_shape)
+    if resort:
+        # order is preserved by construction; only padding positions move
+        out = SparseTensor(out.indices, out.values, out.valid, out.shape,
+                           out.nnz, sorted_mode=0 if st.sorted_mode == 0 else None)
+    return out
+
+
+def reshard_dense(x: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
+    """Dense redistribution between arbitrary meshes/specs (Cyclops §3.2
+    'efficient mechanisms for redistribution of dense matrices')."""
+    return jax.device_put(x, NamedSharding(mesh, spec))

@@ -1,0 +1,132 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st_
+
+from repro.core import losses as L
+from repro.core.sparse_tensor import SparseTensor
+from repro.core.completion.als import batched_cg
+from repro.core.tttp import multilinear_values, tttp
+from repro.sparse import ops as sops
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+dims = st_.tuples(st_.integers(3, 20), st_.integers(3, 15),
+                  st_.integers(3, 10))
+
+
+@given(dims, st_.integers(5, 60), st_.integers(1, 12), st_.integers(0, 2 ** 31))
+def test_tttp_linearity_in_values(shape, nnz, r, seed):
+    """TTTP(αS, A) == α·TTTP(S, A) and TTTP(S+S', A) == TTTP(S)+TTTP(S')."""
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    s = SparseTensor.random(key, shape, nnz, cap=nnz + 5)
+    ks = jax.random.split(key, 3)
+    factors = [jax.random.normal(k, (d, r)) for k, d in zip(ks, shape)]
+    a = tttp(s.scale(2.5), factors).values
+    b = 2.5 * tttp(s, factors).values
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    s2 = s.with_values(jax.random.normal(ks[0], (s.cap,)))
+    lhs = tttp(s.add(s2), factors).values
+    rhs = tttp(s, factors).values + tttp(s2, factors).values
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@given(dims, st_.integers(5, 60), st_.integers(1, 8), st_.integers(0, 2 ** 31))
+def test_tttp_rank_additivity(shape, nnz, r, seed):
+    """TTTP is linear in the rank dimension: concatenating factor columns
+    sums the outputs (the H-slicing identity the parallel algorithm uses)."""
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    s = SparseTensor.random(key, shape, nnz)
+    ks = jax.random.split(key, 6)
+    f1 = [jax.random.normal(k, (d, r)) for k, d in zip(ks[:3], shape)]
+    f2 = [jax.random.normal(k, (d, r)) for k, d in zip(ks[3:], shape)]
+    cat = [jnp.concatenate([a, b], 1) for a, b in zip(f1, f2)]
+    lhs = tttp(s, cat).values
+    rhs = tttp(s, f1).values + tttp(s, f2).values
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@given(dims, st_.integers(5, 50), st_.integers(1, 8), st_.integers(0, 2 ** 31))
+def test_mttkrp_matches_dense_einsum(shape, nnz, r, seed):
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    s = SparseTensor.random(key, shape, nnz)
+    ks = jax.random.split(key, 3)
+    factors = [jax.random.normal(k, (d, r)) for k, d in zip(ks, shape)]
+    got = sops.mttkrp(s, [None, factors[1], factors[2]], 0)
+    want = jnp.einsum("ijk,jr,kr->ir", s.todense(), factors[1], factors[2])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(dims, st_.integers(5, 50), st_.integers(0, 2 ** 31))
+def test_transpose_roundtrip(shape, nnz, seed):
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    s = SparseTensor.random(key, shape, nnz)
+    perm = (2, 0, 1)
+    inv = (1, 2, 0)
+    back = s.transpose(perm).transpose(inv)
+    np.testing.assert_allclose(back.todense(), s.todense())
+
+
+@given(dims, st_.integers(5, 50), st_.integers(0, 2 ** 31))
+def test_reshape_preserves_values(shape, nnz, seed):
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    s = SparseTensor.random(key, shape, nnz)
+    flat = s.reshape((int(np.prod(shape)),))
+    np.testing.assert_allclose(jnp.sort(flat.masked_values()),
+                               jnp.sort(s.masked_values()))
+
+
+@given(st_.integers(2, 30), st_.integers(1, 10), st_.integers(0, 2 ** 31))
+def test_batched_cg_solves_spd(n, r, seed):
+    """CG solves random SPD systems to tolerance within r iterations."""
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    a = jax.random.normal(key, (n, r, r))
+    spd = jnp.einsum("nij,nkj->nik", a, a) + \
+        3e-1 * jnp.eye(r)[None]
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, r))
+    mv = lambda x: jnp.einsum("nij,nj->ni", spd, x)
+    x, iters = batched_cg(mv, b, jnp.zeros_like(b), tol=1e-6,
+                          max_iters=4 * r + 10)
+    np.testing.assert_allclose(mv(x), b, rtol=2e-3, atol=2e-3)
+
+
+@given(st_.sampled_from(list(L.LOSSES)), st_.integers(0, 2 ** 31))
+def test_loss_grads_match_autodiff(name, seed):
+    """Hand-written loss gradients == jax.grad."""
+    loss = L.LOSSES[name]
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    t = jnp.abs(jax.random.normal(key, (50,))) + 0.1
+    if name == "logistic":
+        t = (t > 0.5).astype(jnp.float32)
+    m = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (50,))) + 0.1
+    got = loss.grad(t, m)
+    want = jax.vmap(jax.grad(lambda mm, tt: loss.value(tt, mm)))(m, t)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(dims, st_.integers(5, 40), st_.integers(5, 40), st_.integers(0, 2 ** 31))
+def test_union_add_commutes(shape, n1, n2, seed):
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    a = SparseTensor.random(key, shape, n1)
+    b = SparseTensor.random(jax.random.fold_in(key, 1), shape, n2)
+    ab = sops.sparse_add_union(a, b).todense()
+    ba = sops.sparse_add_union(b, a).todense()
+    np.testing.assert_allclose(ab, ba, rtol=1e-6, atol=1e-6)
+
+
+@given(dims, st_.integers(10, 60), st_.integers(1, 6), st_.integers(2, 4),
+       st_.integers(0, 2 ** 31))
+def test_h_sliced_tttp_invariant(shape, nnz, r_per, h, seed):
+    """Paper's H-slicing: slicing R into H column groups is exact."""
+    from repro.core.tttp import tttp_sliced
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    r = r_per * h
+    s = SparseTensor.random(key, shape, nnz)
+    ks = jax.random.split(key, 3)
+    factors = [jax.random.normal(k, (d, r)) for k, d in zip(ks, shape)]
+    np.testing.assert_allclose(tttp_sliced(s, factors, h).values,
+                               tttp(s, factors).values,
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,111 @@
+"""SparseTensor container + hypersparse kernel behaviour (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparse_tensor import SparseTensor
+from repro.core import tttp as core_tttp
+from repro.sparse import ops as sops
+from repro.sparse.ccsr import build_ccsr
+
+
+@pytest.fixture
+def st():
+    return SparseTensor.random(jax.random.PRNGKey(0), (37, 23, 11), 300,
+                               cap=384)
+
+
+def test_todense_roundtrip(st):
+    dense = st.todense()
+    assert dense.shape == (37, 23, 11)
+    # values at stored coordinates present
+    assert float(jnp.sum(jnp.abs(dense))) > 0
+
+
+def test_transpose_matches_dense(st):
+    for perm in [(2, 0, 1), (1, 0, 2), (2, 1, 0)]:
+        got = st.transpose(perm).todense()
+        want = jnp.transpose(st.todense(), perm)
+        np.testing.assert_allclose(got, want)
+
+
+def test_reshape_matches_dense(st):
+    got = st.reshape((37 * 23, 11)).todense()
+    np.testing.assert_allclose(got, st.todense().reshape(37 * 23, 11))
+
+
+def test_sort_and_ccsr_invariants(st):
+    sts = st.sort_by_mode(0)
+    rows = np.asarray(sts.indices[:, 0])[np.asarray(sts.valid)]
+    assert (np.diff(rows) >= 0).all()
+    cc = build_ccsr(sts, 0)
+    nr = int(cc.nnz_rows)
+    rid = np.asarray(cc.row_ids)
+    rptr = np.asarray(cc.row_ptr)
+    uniq, counts = np.unique(rows, return_counts=True)
+    assert nr == len(uniq)
+    np.testing.assert_array_equal(rid[:nr], uniq)
+    np.testing.assert_array_equal(np.diff(rptr[:nr + 1]), counts)
+    # Θ(m) storage: capacity never scales with the number of rows
+    assert cc.rows_cap <= sts.cap
+
+
+def test_ttm_variants_agree(st):
+    w = jax.random.normal(jax.random.PRNGKey(1), (11, 16))
+    dense = sops.ttm_fully_dense(st.todense(), w, 2)
+    sparse_dense_out = sops.ttm_dense_output(st, w, 2)
+    hyper = sops.ttm_hypersparse(st, w, 2).todense()
+    np.testing.assert_allclose(sparse_dense_out, dense, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(hyper, dense, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_mttkrp_all_paths_agree(st, mode):
+    r = 12
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    factors = [jax.random.normal(k, (d, r)) for k, d in zip(ks, st.shape)]
+    fac = list(factors)
+    fac[mode] = None
+    a = sops.mttkrp(st, fac, mode)
+    b = sops.mttkrp_pairwise_t_first(st, fac, mode)
+    c = sops.mttkrp_pairwise_kr_first(st, fac, mode)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_add_union_patterns():
+    a = SparseTensor.random(jax.random.PRNGKey(3), (20, 10, 5), 80)
+    b = SparseTensor.random(jax.random.PRNGKey(4), (20, 10, 5), 60)
+    got = sops.sparse_add_union(a, b).todense()
+    np.testing.assert_allclose(got, a.todense() + b.todense(),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sparse_add_union_duplicate_merge():
+    idx = jnp.array([[1, 2, 3], [1, 2, 3], [4, 5, 0]], jnp.int32)
+    a = SparseTensor.from_coo(idx, jnp.array([1.0, 2.0, 3.0]), (8, 8, 8))
+    out = sops.sparse_add_union(a, a)
+    dense = out.todense()
+    assert float(dense[1, 2, 3]) == 6.0
+    assert float(dense[4, 5, 0]) == 6.0
+
+
+def test_sddmm_matches_dense():
+    s = SparseTensor.random(jax.random.PRNGKey(5), (30, 20), 100)
+    u = jax.random.normal(jax.random.PRNGKey(6), (30, 8))
+    v = jax.random.normal(jax.random.PRNGKey(7), (20, 8))
+    got = sops.sddmm(s, u, v).todense()
+    want = s.todense() * (u @ v.T)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_tttp_pairwise_and_sliced_equal_allatonce(st):
+    r = 16
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    factors = [jax.random.normal(k, (d, r)) for k, d in zip(ks, st.shape)]
+    a = core_tttp.tttp(st, factors).values
+    b = core_tttp.tttp_pairwise(st, factors).values
+    c = core_tttp.tttp_sliced(st, factors, 4).values
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)
