@@ -1,0 +1,102 @@
+"""Planner dispatch overhead + cost-model quality on the MTTKRP and TTTP
+shapes of bench_mttkrp / bench_tttp: planned (cost-model-chosen) einsum vs
+the hard-coded kernel calls, plus every forced path so the CSV shows whether
+the model picked the measured winner (DESIGN.md §5)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro import planner
+from repro.core import api as ctf
+from repro.core.sparse_tensor import SparseTensor
+from repro.sparse import ops as sops
+
+MEM_BUDGET = 2 ** 28
+
+
+def _mttkrp(quick: bool) -> None:
+    key = jax.random.PRNGKey(2)
+    nnz = 20_000 if quick else 100_000
+    r = 32
+    densities = [1e-2, 1e-4] if quick else [1e-2, 1e-3, 1e-4, 1e-5]
+    for dens in densities:
+        dim = max(8, int(round((nnz / dens) ** (1 / 3))))
+        st = SparseTensor.random(key, (dim,) * 3, nnz)
+        ks = jax.random.split(key, 2)
+        v, w = [jax.random.normal(k, (dim, r)) for k in ks]
+
+        plan = ctf.plan("ijk,jr,kr->ir", st, v, w)
+        f_hard = jax.jit(lambda s, a, b: sops.mttkrp(s, [None, a, b], 0))
+        us_hard = time_fn(f_hard, st, v, w)
+        emit(f"planner_mttkrp_hardcoded_d{dens:g}", us_hard, "sops.mttkrp")
+
+        f_plan = jax.jit(lambda s, a, b:
+                         ctf.einsum("ijk,jr,kr->ir", s, a, b))
+        us_plan = time_fn(f_plan, st, v, w)
+        emit(f"planner_mttkrp_planned_d{dens:g}", us_plan,
+             f"chose={plan.path};overhead={us_plan / max(us_hard, 1):.2f}x")
+
+        for path in plan.candidates:
+            if path == "kr_first" and 4 * dim * dim * r > MEM_BUDGET:
+                emit(f"planner_mttkrp_path_{path}_d{dens:g}", -1, "OOM-budget")
+                continue
+            if path == "dense" and 4 * dim ** 3 > MEM_BUDGET:
+                emit(f"planner_mttkrp_path_{path}_d{dens:g}", -1, "OOM-budget")
+                continue
+            note = f"est={plan.cost(path).seconds * 1e6:.1f}us"
+            if path == "bucketed":
+                # under jit the bucketed path silently falls back to
+                # all_at_once (host bucketize needs concrete indices), so
+                # time it eagerly — per-call bucketize included
+                f = lambda s, a, b: ctf.einsum("ijk,jr,kr->ir", s, a, b,
+                                               path="bucketed")
+                note += ";eager-incl-bucketize"
+            else:
+                f = jax.jit(lambda s, a, b, p=path:
+                            ctf.einsum("ijk,jr,kr->ir", s, a, b, path=p))
+            emit(f"planner_mttkrp_path_{path}_d{dens:g}", time_fn(f, st, v, w),
+                 note)
+
+
+def _tttp(quick: bool) -> None:
+    key = jax.random.PRNGKey(3)
+    nnz = 20_000 if quick else 100_000
+    r = 32
+    densities = [1e-2, 1e-4] if quick else [1e-2, 1e-4]
+    for dens in densities:
+        dim = max(8, int(round((nnz / dens) ** (1 / 3))))
+        st = SparseTensor.random(key, (dim,) * 3, nnz)
+        ks = jax.random.split(key, 3)
+        u, v, w = [jax.random.normal(k, (dim, r)) for k in ks]
+
+        plan = ctf.plan("ijk,ir,jr,kr->ijk", st, u, v, w)
+        f_hard = jax.jit(lambda s, a, b, c:
+                         ctf.TTTP(s, [a, b, c], path="all_at_once").values)
+        us_hard = time_fn(f_hard, st, u, v, w)
+        emit(f"planner_tttp_hardcoded_d{dens:g}", us_hard, "kernels.ops.tttp")
+
+        f_plan = jax.jit(lambda s, a, b, c:
+                         ctf.einsum("ijk,ir,jr,kr->ijk", s, a, b, c).values)
+        us_plan = time_fn(f_plan, st, u, v, w)
+        emit(f"planner_tttp_planned_d{dens:g}", us_plan,
+             f"chose={plan.path};overhead={us_plan / max(us_hard, 1):.2f}x")
+
+        for path in plan.candidates:
+            if path == "dense" and 4 * dim ** 3 > MEM_BUDGET:
+                emit(f"planner_tttp_path_{path}_d{dens:g}", -1, "OOM-budget")
+                continue
+            f = jax.jit(lambda s, a, b, c, p=path:
+                        ctf.einsum("ijk,ir,jr,kr->ijk", s, a, b, c,
+                                   path=p).values)
+            emit(f"planner_tttp_path_{path}_d{dens:g}",
+                 time_fn(f, st, u, v, w),
+                 f"est={plan.cost(path).seconds * 1e6:.1f}us")
+
+
+def run(quick: bool = False):
+    planner.clear_plan_cache()
+    _mttkrp(quick)
+    _tttp(quick)
+    emit("planner_cache_entries", float(planner.plan_cache_size()),
+         "plans built once per static signature")

@@ -11,8 +11,8 @@ import time
 import traceback
 
 from benchmarks import (bench_ccd_variants, bench_completion, bench_gcp,
-                        bench_mttkrp, bench_redistribution, bench_ttm,
-                        bench_tttp)
+                        bench_mttkrp, bench_planner, bench_redistribution,
+                        bench_ttm, bench_tttp)
 
 MODULES = [
     ("fig4_redistribution", bench_redistribution),
@@ -22,6 +22,7 @@ MODULES = [
     ("fig7_completion", bench_completion),
     ("sec5.5_ccd_variants", bench_ccd_variants),
     ("gcp_generalized_losses", bench_gcp),
+    ("planner_dispatch", bench_planner),
 ]
 
 

@@ -10,18 +10,24 @@ be sharded; ops run identically (the paper's parallelism-obliviousness).
     S = ctf.TTTP(T, [U, V, W])                     # Listing 3
     y = ctf.einsum("ijk,jr,kr->ir", T, V, W)       # MTTKRP
     a = ctf.einsum("ijk->i", S)                    # sparse reduction
+
+Both ``einsum`` and ``TTTP`` route through ``repro.planner``: the expression
+is parsed into a typed contraction IR, candidate execution paths (all-at-once,
+pairwise T-first / KR-first, bucketed Pallas, dense fallback, …) are ranked by
+the paper-§5.3 cost model, and the winner is dispatched onto the kernel
+library. Plans are cached on the static call signature. ``path=`` forces a
+specific candidate; ``plan=`` reuses a caller-held plan; ``autotune=True``
+times the candidates once and pins the measured winner (DESIGN.md §5).
 """
 from __future__ import annotations
 
-import re
 from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.sparse_tensor import SparseTensor
-from repro.core import tttp as _tttp
-from repro.sparse import ops as sops
+from repro import planner as _planner
 
 Tensor = Union[SparseTensor, jax.Array]
 
@@ -48,54 +54,34 @@ def eye(n: int) -> jax.Array:
     return jnp.eye(n)
 
 
-def TTTP(st: SparseTensor, factors: Sequence[Optional[jax.Array]]) -> SparseTensor:
+def TTTP(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
+         path: Optional[str] = None, autotune: bool = False) -> SparseTensor:
     """Paper Listing 3; accepts None entries and vector factors."""
-    return _tttp.tttp(st, factors)
+    return _planner.planned_tttp(st, factors, path=path, autotune=autotune)
 
 
-def _parse(expr: str):
-    lhs, rhs = expr.replace(" ", "").split("->")
-    return lhs.split(","), rhs
-
-
-def einsum(expr: str, *operands: Tensor) -> Tensor:
+def einsum(expr: str, *operands: Tensor, path: Optional[str] = None,
+           plan: Optional["_planner.Plan"] = None,
+           autotune: bool = False) -> Tensor:
     """Einstein summation over mixed sparse/dense operands.
 
-    Supported sparse patterns (those arising in the paper's algorithms):
+    Supported sparse patterns (any tensor order, one sparse operand):
       * pure-dense expressions — delegated to jnp.einsum;
-      * one sparse operand, reduction only:        "ijk->i"
-      * one sparse + one dense matrix (TTM):        "ijk,kr->ijr"
-      * MTTKRP family (sparse + N−1 factors):       "ijk,jr,kr->ir"
+      * sparse reductions over arbitrary mode subsets:  "ijkl->li", "ijk->"
+      * TTM (one dense matrix, any output order):       "ijk,kr->ijr"
+      * MTTKRP family (classic and partial/multi-out):  "ijk,jr,kr->ir",
+                                                        "ijkl,kr,lr->ijr"
+      * TTTP / SDDMM (sampled multilinear, sparse out): "ijk,ir,jr,kr->ijk"
+
+    ``path=`` forces one of the plan's candidate paths (see
+    ``repro.planner.candidate_paths``); the default lets the cost model pick.
     """
-    terms, out = _parse(expr)
-    sparse_pos = [i for i, op in enumerate(operands)
-                  if isinstance(op, SparseTensor)]
-    if not sparse_pos:
-        return jnp.einsum(expr, *operands)
-    if len(sparse_pos) != 1 or sparse_pos[0] != 0:
-        raise NotImplementedError(
-            "sparse einsum supports a single sparse operand in first position")
-    st: SparseTensor = operands[0]
-    s_term = terms[0]
-    if len(operands) == 1:
-        if len(out) == 1 and out in s_term:
-            return st.reduce_mode(s_term.index(out))
-        if out == "":
-            return st.sum()
-        raise NotImplementedError(f"unsupported sparse reduction {expr}")
-    # factor operands must be (dim, r)-shaped with shared output rank index
-    if len(out) == 2 and out[0] in s_term:
-        mode = s_term.index(out[0])
-        r_idx = out[1]
-        factors: list = [None] * st.ndim
-        for term, op in zip(terms[1:], operands[1:]):
-            if len(term) != 2 or term[1] != r_idx or term[0] not in s_term:
-                raise NotImplementedError(f"unsupported term {term} in {expr}")
-            factors[s_term.index(term[0])] = op
-        return sops.mttkrp(st, factors, mode)
-    if len(out) == len(s_term) and set(out) - set(s_term):
-        # TTM: "ijk,kr->ijr"-style (one contracted mode, output keeps r)
-        (term2, w), = [(t, o) for t, o in zip(terms[1:], operands[1:])]
-        mode = s_term.index(term2[0])
-        return sops.ttm_dense_output(st, w, mode)
-    raise NotImplementedError(f"unsupported sparse einsum pattern {expr}")
+    return _planner.planned_einsum(expr, *operands, path=path, plan=plan,
+                                   autotune=autotune)
+
+
+def plan(expr: str, *operands: Tensor, path: Optional[str] = None,
+         autotune: bool = False) -> "_planner.Plan":
+    """Inspect/precompute the plan ``einsum`` would use for this call."""
+    return _planner.plan_contraction(expr, operands, path=path,
+                                     autotune=autotune)

@@ -24,23 +24,24 @@ import jax.numpy as jnp
 from repro.core.distributed import (AxisCtx, LOCAL, mttkrp_ctx, rowdot_ctx,
                                     tttp_ctx)
 from repro.core.sparse_tensor import SparseTensor
-from repro.sparse import ops as sops
 
 
 def gram_matvec(omega: SparseTensor, factors: Sequence[jax.Array], mode: int,
                 x: jax.Array, lam: float, ctx: AxisCtx = LOCAL,
-                h_slices: int = 1) -> jax.Array:
+                h_slices: int = 1,
+                mttkrp_path: Optional[str] = None) -> jax.Array:
     """(G + λI) x via implicit TTTP+MTTKRP (paper eq. 3).
 
     ``h_slices > 1`` applies the paper's H-slicing schedule to BOTH halves:
     the (m, R) Khatri-Rao intermediates are never materialized wider than
-    R/H columns, bounding transient memory at Θ(m·R/H) (paper §3.2)."""
+    R/H columns, bounding transient memory at Θ(m·R/H) (paper §3.2).
+    ``mttkrp_path`` opts the MTTKRP half into planner dispatch (DESIGN.md §5)."""
     fs = list(factors)
     fs[mode] = x
     if h_slices <= 1:
         z = tttp_ctx(omega, fs, ctx)        # z_n = Σ_s Π a_ds · x_is  (TTTP)
         fs[mode] = None
-        y = mttkrp_ctx(z, fs, mode, ctx)    # MTTKRP back onto the mode
+        y = mttkrp_ctx(z, fs, mode, ctx, path=mttkrp_path)
         return y + lam * x
     from repro.core.tttp import multilinear_values
     r = x.shape[1]
@@ -51,10 +52,12 @@ def gram_matvec(omega: SparseTensor, factors: Sequence[jax.Array], mode: int,
         acc = acc + multilinear_values(omega, sl)
     z = omega.with_values(omega.values * ctx.psum_model(acc))
     fs[mode] = None
+    from repro.planner import mttkrp_fn
+    mv_kernel = mttkrp_fn(mttkrp_path)
     cols = []
     for h in range(h_slices):
         sl = [None if f is None else f[:, h * rs:(h + 1) * rs] for f in fs]
-        cols.append(sops.mttkrp(z, sl, mode))
+        cols.append(mv_kernel(z, sl, mode))
     y = ctx.psum_data(jnp.concatenate(cols, axis=1)[:, :r])
     return y + lam * x
 
@@ -95,13 +98,16 @@ def batched_cg(matvec, b: jax.Array, x0: jax.Array, tol: float = 1e-4,
 def als_update_mode(st: SparseTensor, omega: SparseTensor,
                     factors: List[jax.Array], mode: int, lam: float,
                     cg_tol: float = 1e-4, cg_iters: int = 32,
-                    ctx: AxisCtx = LOCAL, h_slices: int = 1) -> jax.Array:
-    """One ALS factor update by implicit CG."""
+                    ctx: AxisCtx = LOCAL, h_slices: int = 1,
+                    mttkrp_path: Optional[str] = None) -> jax.Array:
+    """One ALS factor update by implicit CG. ``mttkrp_path`` opts the
+    MTTKRP contractions into planner dispatch (repro.planner)."""
     fs = list(factors)
     fs[mode] = None
-    b = mttkrp_ctx(st, fs, mode, ctx)
+    b = mttkrp_ctx(st, fs, mode, ctx, path=mttkrp_path)
     mv = functools.partial(gram_matvec, omega, factors, mode, lam=lam,
-                           ctx=ctx, h_slices=h_slices)
+                           ctx=ctx, h_slices=h_slices,
+                           mttkrp_path=mttkrp_path)
     x, _ = batched_cg(mv, b, factors[mode], tol=cg_tol, max_iters=cg_iters,
                       ctx=ctx)
     return x
@@ -110,12 +116,13 @@ def als_update_mode(st: SparseTensor, omega: SparseTensor,
 def als_sweep(st: SparseTensor, omega: SparseTensor,
               factors: Sequence[jax.Array], lam: float,
               cg_tol: float = 1e-4, cg_iters: int = 32,
-              ctx: AxisCtx = LOCAL, h_slices: int = 1) -> List[jax.Array]:
+              ctx: AxisCtx = LOCAL, h_slices: int = 1,
+              mttkrp_path: Optional[str] = None) -> List[jax.Array]:
     """Full ALS sweep (all modes, in order) — paper Algorithm of §2.2."""
     fs = list(factors)
     for d in range(st.ndim):
         fs[d] = als_update_mode(st, omega, fs, d, lam, cg_tol, cg_iters,
-                                ctx, h_slices)
+                                ctx, h_slices, mttkrp_path=mttkrp_path)
     return fs
 
 

@@ -17,14 +17,13 @@ sums; factors replicated — CCD's column updates leave no model axis).
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.distributed import AxisCtx, LOCAL
 from repro.core.sparse_tensor import SparseTensor
-from repro.kernels import ops as kops
 
 
 def residual_values(st: SparseTensor, factors: Sequence[jax.Array],
@@ -62,8 +61,9 @@ def _ccd_column_update_einsum(rho, st, cols, mode, lam, ctx):
     return new_col, (rho + delta) * st.mask
 
 
-def _ccd_column_update_tttp(rho, st, cols, mode, lam, ctx):
-    """Same update routed through TTTP + sparse mode-reduction (Listing 6)."""
+def _ccd_column_update_tttp(rho, st, cols, mode, lam, ctx, path=None):
+    """Same update routed through TTTP + sparse mode-reduction (Listing 6).
+    ``path`` opts the TTTP contractions into planner dispatch."""
     other = [d for d in range(st.ndim) if d != mode]
     rho_st = st.with_values(rho)
     fac = [None] * st.ndim
@@ -71,13 +71,15 @@ def _ccd_column_update_tttp(rho, st, cols, mode, lam, ctx):
     for d in other:
         fac[d] = cols[d]
         fac2[d] = jnp.square(cols[d])
-    a_sp = kops.tttp(rho_st, fac)                      # A = TTTP(ρ,[None,v,w])
+    from repro.planner import tttp_fn
+    tttp_k = tttp_fn(path)
+    a_sp = tttp_k(rho_st, fac)                        # A = TTTP(ρ,[None,v,w])
     a = ctx.psum_data(a_sp.reduce_mode(mode))          # a = einsum('ijk->i', A)
     omega = st.with_values(jnp.ones_like(rho) * st.mask)
-    b_sp = kops.tttp(omega, fac2)                      # B = TTTP(Ω,[None,v²,w²])
+    b_sp = tttp_k(omega, fac2)                        # B = TTTP(Ω,[None,v²,w²])
     den0 = ctx.psum_data(b_sp.reduce_mode(mode))
     new_col = (a + cols[mode] * den0) / (lam + den0)
-    vw = kops.tttp_values(omega, fac)
+    vw = tttp_k(omega, fac).values
     rows = st.indices[:, mode]
     delta = (cols[mode] - new_col)[rows] * vw
     return new_col, (rho + delta) * st.mask
@@ -109,7 +111,10 @@ def ccd_sweep(st: SparseTensor, factors: Sequence[jax.Array], rho: jax.Array,
 
 
 def ccd_sweep_tttp(st: SparseTensor, factors: Sequence[jax.Array],
-                   rho: jax.Array, lam: float, ctx: AxisCtx = LOCAL
+                   rho: jax.Array, lam: float, ctx: AxisCtx = LOCAL,
+                   tttp_path: Optional[str] = None
                    ) -> Tuple[List[jax.Array], jax.Array]:
-    """One CCD++ sweep, TTTP-based variant (paper Listing 6)."""
-    return _ccd_sweep_impl(_ccd_column_update_tttp, st, factors, rho, lam, ctx)
+    """One CCD++ sweep, TTTP-based variant (paper Listing 6).
+    ``tttp_path`` opts the TTTP kernels into planner dispatch."""
+    update = functools.partial(_ccd_column_update_tttp, path=tttp_path)
+    return _ccd_sweep_impl(update, st, factors, rho, lam, ctx)

@@ -13,7 +13,7 @@ for the stochastic variant).
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,6 @@ import jax.numpy as jnp
 from repro.core.distributed import AxisCtx, LOCAL
 from repro.core.losses import Loss
 from repro.core.sparse_tensor import SparseTensor
-from repro.sparse import ops as sops
 
 
 class AdamState(NamedTuple):
@@ -47,27 +46,34 @@ def gcp_loss(st: SparseTensor, factors: Sequence[jax.Array], loss: Loss,
 
 
 def gcp_gradients(st: SparseTensor, factors: Sequence[jax.Array], loss: Loss,
-                  lam: float, ctx: AxisCtx = LOCAL) -> List[jax.Array]:
+                  lam: float, ctx: AxisCtx = LOCAL,
+                  mttkrp_path: Optional[str] = None) -> List[jax.Array]:
+    """Per-factor gradients; ``mttkrp_path`` opts the MTTKRP contractions
+    into planner dispatch (repro.planner, DESIGN.md §5)."""
     from repro.core.tttp import multilinear_values
     model = ctx.psum_model(multilinear_values(st, list(factors)))
     g_vals = jnp.where(st.mask, loss.grad(st.values, model), 0.0)
     g_st = st.with_values(g_vals)
+    from repro.planner import mttkrp_fn
+    mttkrp = mttkrp_fn(mttkrp_path)
     grads = []
     for d in range(st.ndim):
         fs = list(factors)
         fs[d] = None
-        g = ctx.psum_data(sops.mttkrp(g_st, fs, d))
-        grads.append(g + 2.0 * lam * factors[d])
+        grads.append(ctx.psum_data(mttkrp(g_st, fs, d))
+                     + 2.0 * lam * factors[d])
     return grads
 
 
 def gcp_step(st: SparseTensor, factors: Sequence[jax.Array], loss: Loss,
              lam: float, lr: float, state: AdamState,
              use_adam: bool = True, b1: float = 0.9, b2: float = 0.999,
-             eps: float = 1e-8, ctx: AxisCtx = LOCAL
+             eps: float = 1e-8, ctx: AxisCtx = LOCAL,
+             mttkrp_path: Optional[str] = None
              ) -> Tuple[List[jax.Array], AdamState]:
     """One full-batch generalized-loss update (GD or Adam)."""
-    grads = gcp_gradients(st, factors, loss, lam, ctx)
+    grads = gcp_gradients(st, factors, loss, lam, ctx,
+                          mttkrp_path=mttkrp_path)
     fs = list(factors)
     if not use_adam:
         return [f - lr * g for f, g in zip(fs, grads)], state

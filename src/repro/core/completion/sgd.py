@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.distributed import AxisCtx, LOCAL
 from repro.core.sparse_tensor import SparseTensor
+from repro.core.utils import axis_size
 from repro.sparse import ops as sops
 
 
@@ -49,7 +50,7 @@ def sgd_sweep(key, st: SparseTensor, factors: Sequence[jax.Array],
         names = ctx.data if isinstance(ctx.data, tuple) else (ctx.data,)
         idx = 0
         for n in names:
-            idx = idx * jax.lax.axis_size(n) + jax.lax.axis_index(n)
+            idx = idx * axis_size(n) + jax.lax.axis_index(n)
         key = jax.random.fold_in(key, idx)
     sample = sample_entries(key, st, sample_size)
     scale = st.count_valid().astype(jnp.float32) / sample_size

@@ -31,6 +31,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.sparse_tensor import SparseTensor
+from repro.core.utils import axis_size
 from repro.sparse import ops as sops
 
 
@@ -50,7 +51,7 @@ class AxisCtx:
         if self.data is None:
             return 1
         names = self.data if isinstance(self.data, tuple) else (self.data,)
-        return int(np.prod([jax.lax.axis_size(n) for n in names]))
+        return int(np.prod([axis_size(n) for n in names]))
 
     def model_index(self):
         return jax.lax.axis_index(self.model) if self.model is not None else 0
@@ -93,19 +94,28 @@ class DistLayout:
 # ---------------------------------------------------------------------------
 
 def tttp_ctx(st: SparseTensor, factors, ctx: AxisCtx,
-             kernel_fn=None) -> SparseTensor:
-    """TTTP under AxisCtx: factors column-sharded ⇒ local partial + psum."""
+             kernel_fn=None, path: Optional[str] = None) -> SparseTensor:
+    """TTTP under AxisCtx: factors column-sharded ⇒ local partial + psum.
+
+    ``path`` opts into planner dispatch (``repro.planner.planned_tttp``);
+    it only applies when factors are replicated (no model axis) — under
+    column sharding the partial-inner-product structure is fixed."""
+    if path is not None and ctx.model is None and kernel_fn is None:
+        from repro.planner import tttp_fn
+        return tttp_fn(path)(st, factors)
     from repro.core.tttp import multilinear_values
     fn = kernel_fn or multilinear_values
     partial = fn(st, factors)
     return st.with_values(st.values * ctx.psum_model(partial))
 
 
-def mttkrp_ctx(st: SparseTensor, factors, mode: int, ctx: AxisCtx) -> jax.Array:
+def mttkrp_ctx(st: SparseTensor, factors, mode: int, ctx: AxisCtx,
+               path: Optional[str] = None) -> jax.Array:
     """MTTKRP under AxisCtx: local segment-sum + psum over data axes.
-    Output is (rows, R_local): replicated over data, column-sharded."""
-    y = sops.mttkrp(st, factors, mode)
-    return ctx.psum_data(y)
+    Output is (rows, R_local): replicated over data, column-sharded.
+    ``path`` opts into planner dispatch for the local contraction."""
+    from repro.planner import mttkrp_fn
+    return ctx.psum_data(mttkrp_fn(path)(st, factors, mode))
 
 
 def rowdot_ctx(a: jax.Array, b: jax.Array, ctx: AxisCtx) -> jax.Array:
@@ -128,7 +138,7 @@ def sparse_allreduce_butterfly(st: SparseTensor, axis_name: str) -> SparseTensor
     (all-gather). Static capacities throughout; per-step message capacity is
     the full block capacity (mask-padded), so the win vs. dense all-reduce is
     the Θ(m) payload, as in the paper."""
-    size = jax.lax.axis_size(axis_name)
+    size = axis_size(axis_name)
     rank = jax.lax.axis_index(axis_name)
     steps = int(np.log2(size))
     assert 2 ** steps == size, "butterfly requires power-of-two axis"

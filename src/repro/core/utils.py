@@ -14,6 +14,13 @@ def round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def axis_size(name) -> int:
+    """Static size of a mapped mesh axis. ``jax.lax.axis_size`` only exists
+    in newer jax; ``psum`` of a Python scalar is special-cased to return the
+    axis size as a static int on every version we support."""
+    return jax.lax.psum(1, name)
+
+
 def cdiv(a: int, b: int) -> int:
     return (a + b - 1) // b
 

@@ -1,0 +1,108 @@
+"""Sparse einsum planner: cost-model-driven contraction paths with plan
+caching and kernel dispatch (DESIGN.md §5).
+
+Layering::
+
+    ir.py        einsum IR — parse + classify into contraction families
+    cost.py      paper §5.3 flop/memory formulas per candidate path
+    plan.py      path enumeration, ranking, plan cache, autotuning
+    dispatch.py  lowering onto repro.sparse.ops / repro.kernels
+
+``repro.core.api.einsum`` and ``api.TTTP`` are thin shims over
+:func:`planned_einsum`; the completion solvers opt in through the
+``path=`` overrides of :func:`planned_mttkrp` / :func:`planned_tttp`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.core.sparse_tensor import SparseTensor
+from repro.planner.cost import PathCost, candidate_paths, estimate, rank_paths
+from repro.planner.dispatch import execute
+from repro.planner.ir import ContractionIR, build_ir
+from repro.planner.plan import (Plan, clear_plan_cache, plan_cache_size,
+                                plan_contraction)
+
+__all__ = [
+    "ContractionIR", "PathCost", "Plan",
+    "build_ir", "candidate_paths", "estimate", "rank_paths",
+    "plan_contraction", "clear_plan_cache", "plan_cache_size",
+    "execute", "planned_einsum", "planned_mttkrp", "planned_tttp",
+    "mttkrp_fn", "tttp_fn",
+]
+
+# mode letters for synthesized expressions; 'z' is reserved for the rank
+_MODE_LETTERS = "abcdefghij"
+_RANK_LETTER = "z"
+
+
+def mttkrp_fn(path: Optional[str] = None):
+    """The solvers' opt-in seam: ``None`` returns the direct kernel
+    (``sparse.ops.mttkrp``, no planning overhead); a path string returns a
+    drop-in pinned to that planner path. Same ``(st, factors, mode)``
+    signature either way."""
+    if path is None:
+        from repro.sparse import ops as sops
+        return sops.mttkrp
+    return functools.partial(planned_mttkrp, path=path)
+
+
+def tttp_fn(path: Optional[str] = None):
+    """As :func:`mttkrp_fn` for TTTP: ``None`` → ``kernels.ops.tttp``,
+    a path string → planner dispatch pinned to it."""
+    if path is None:
+        from repro.kernels import ops as kops
+        return kops.tttp
+    return functools.partial(planned_tttp, path=path)
+
+
+def planned_einsum(expr: str, *operands, path: Optional[str] = None,
+                   plan: Optional[Plan] = None, autotune: bool = False):
+    """Einsum through the planner; ``path=`` forces a candidate, ``plan=``
+    bypasses planning entirely (the caller owns signature compatibility)."""
+    if plan is None:
+        if not any(isinstance(op, SparseTensor) for op in operands):
+            # pure-dense: nothing to plan — delegate untouched, preserving
+            # jnp.einsum's acceptance of lists/scalars
+            import jax.numpy as jnp
+            return jnp.einsum(expr, *operands)
+        plan = plan_contraction(expr, operands, path=path, autotune=autotune)
+    return plan.execute(operands)
+
+
+def _synth_expr(ndim: int, factor_modes: Sequence[int], out: str) -> str:
+    s_term = _MODE_LETTERS[:ndim]
+    terms = [s_term] + [s_term[d] + _RANK_LETTER for d in factor_modes]
+    return ",".join(terms) + "->" + out
+
+
+def planned_mttkrp(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
+                   mode: int, path: Optional[str] = None,
+                   autotune: bool = False) -> jax.Array:
+    """Classic MTTKRP onto ``mode`` via the planner (drop-in for
+    ``repro.sparse.ops.mttkrp``). ``factors[mode]`` is ignored/None."""
+    present = [d for d in range(st.ndim) if d != mode and factors[d] is not None]
+    out = _MODE_LETTERS[mode] + _RANK_LETTER
+    expr = _synth_expr(st.ndim, present, out)
+    ops = (st, *[factors[d] for d in present])
+    return planned_einsum(expr, *ops, path=path, autotune=autotune)
+
+
+def planned_tttp(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
+                 path: Optional[str] = None,
+                 autotune: bool = False) -> SparseTensor:
+    """TTTP via the planner (drop-in for ``repro.core.tttp.tttp``): accepts
+    None entries and vector factors, per the paper's Listing 3 surface."""
+    fs: List[Optional[jax.Array]] = [
+        None if f is None else (f[:, None] if f.ndim == 1 else f)
+        for f in factors]
+    present = [d for d in range(st.ndim) if fs[d] is not None]
+    if not present:
+        raise ValueError("TTTP requires at least one factor")
+    s_term = _MODE_LETTERS[:st.ndim]
+    expr = _synth_expr(st.ndim, present, s_term)
+    ops = (st, *[fs[d] for d in present])
+    return planned_einsum(expr, *ops, path=path, autotune=autotune)

@@ -1,0 +1,195 @@
+"""Cost model for candidate contraction paths (paper §5.3, DESIGN.md §5.2).
+
+Each candidate path gets a :class:`PathCost` with separate flop and
+memory-traffic estimates (in fused multiply-adds and words moved), combined
+into a time proxy with machine-balance constants. Only the *ratios* between
+paths matter for ranking; the constants encode a ~10 flops/word balance point
+typical of both TPU VPU and modern CPUs.
+
+Formulas (m = nnz, R = rank, N = sparse order, I_d = mode sizes):
+
+* all-at-once MTTKRP / TTTP: Θ(mR·#factors) flops, Θ(mR) transient traffic —
+  no intermediate *tensor* is ever formed (paper Fig. 5b "all-at-once");
+* pairwise T-first: an extra hypersparse TTM — Θ(mR) flops plus a lexicographic
+  sort of the m keys (Θ(m log m) traffic per key column) and a materialized
+  Θ(mR) sparse intermediate (paper Fig. 5b "contract with T first");
+* pairwise KR-first: the Khatri-Rao product is dense — Θ(K·R) flops *and*
+  memory with K = Π_{d≠mode} I_d, which explodes at low density
+  (paper §5.3's conclusion: only viable for relatively dense tensors);
+* dense fallback: densify and ``jnp.einsum`` — Θ(Π I_d · R).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+from repro.planner import ir as pir
+
+# Machine-balance constants (per second): ranking only depends on the ratio.
+FLOP_RATE = 1.0e11   # fused multiply-adds / s
+MEM_RATE = 1.0e10    # words / s
+# words of traffic per element per sort-key column (multi-pass stable argsort)
+SORT_WORDS_PER_KEY = 8.0
+
+# Preference order used only to break exact score ties deterministically.
+_TIE_ORDER = ("all_at_once", "segment", "dense_output", "bucketed", "sliced",
+              "t_first", "hypersparse", "pairwise", "kr_first", "dense")
+
+
+@dataclasses.dataclass(frozen=True)
+class PathCost:
+    path: str
+    flops: float
+    mem: float          # words of memory traffic (input + transient + output)
+    note: str = ""
+
+    @property
+    def seconds(self) -> float:
+        """Roofline-style time proxy: compute + traffic (not overlapped)."""
+        return self.flops / FLOP_RATE + self.mem / MEM_RATE
+
+
+def _sort_traffic(m: int, key_cols: int) -> float:
+    return m * max(math.log2(max(m, 2)), 1.0) * SORT_WORDS_PER_KEY * key_cols
+
+
+def _dense_size(ir: pir.ContractionIR) -> float:
+    return float(math.prod(ir.sparse.shape))
+
+
+def _factor_words(ir: pir.ContractionIR) -> float:
+    shape = ir.sparse.shape
+    r = ir.rank_size
+    return float(sum(shape[d] * r for d in ir.factor_modes))
+
+
+def candidate_paths(ir: pir.ContractionIR) -> List[str]:
+    """Legal execution paths for this IR, unranked."""
+    if ir.kind == pir.DENSE:
+        return ["dense"]
+    if ir.kind == pir.REDUCE:
+        return ["segment", "dense"]
+    if ir.kind == pir.TTTP:
+        return ["all_at_once", "sliced", "pairwise", "dense"]
+    if ir.kind == pir.TTM:
+        return ["dense_output", "hypersparse", "dense"]
+    if ir.kind == pir.MTTKRP:
+        if pir.is_classic_mttkrp(ir):
+            return ["all_at_once", "bucketed", "t_first", "kr_first", "dense"]
+        return ["all_at_once", "dense"]
+    raise ValueError(f"unknown IR kind {ir.kind!r}")
+
+
+def estimate(ir: pir.ContractionIR, path: str) -> PathCost:
+    """Flop/traffic estimate for one (IR, path) pair."""
+    if ir.kind == pir.DENSE:
+        # jnp.einsum handles its own path; charge the naive product size.
+        size = math.prod(s for _, s in ir.sizes)
+        return PathCost("dense", float(size), float(size))
+
+    m = float(ir.nnz)
+    n = len(ir.sparse.shape)
+    shape = ir.sparse.shape
+    coo_words = m * (n + 1)          # indices + values
+
+    if ir.kind == pir.REDUCE:
+        out_words = float(math.prod(shape[d] for d in ir.keep_modes) or 1)
+        if path == "segment":
+            return PathCost(path, m, coo_words + out_words)
+        if path == "dense":
+            d = _dense_size(ir)
+            return PathCost(path, d, d + coo_words + out_words,
+                            note="densify + jnp.einsum")
+
+    r = float(ir.rank_size)
+    nf = len(ir.factor_modes)
+
+    if ir.kind == pir.TTTP:
+        base_in = coo_words + _factor_words(ir)
+        if path == "all_at_once":
+            # the Pallas kernel streams R tiles and XLA fuses the jnp
+            # gather-product-reduce chain: no (m, R) intermediate lands
+            return PathCost(path, m * r * (nf + 1), base_in + m,
+                            note="fused gather-product-reduce (Pallas/XLA)")
+        if path == "sliced":
+            # bounds the transient at mR/H but re-reads the COO indices
+            # once per slice
+            h = _sliced_h(int(r))
+            return PathCost(path, m * r * (nf + 1),
+                            base_in + (h - 1) * coo_words + m * r / h,
+                            note=f"H={h} column slices")
+        if path == "pairwise":
+            # one materialized (m, R) intermediate per factor contraction
+            return PathCost(path, m * r * (nf + 1), base_in + m * r * nf,
+                            note="paper Fig. 6 baseline")
+        if path == "dense":
+            d = _dense_size(ir)
+            return PathCost(path, d * r, d + base_in + m)
+
+    if ir.kind == pir.TTM:
+        others = float(math.prod(shape[d] for d in range(n)
+                                 if d != ir.contract_mode))
+        base_in = coo_words + shape[ir.contract_mode] * r
+        if path == "dense_output":
+            return PathCost(path, m * r, base_in + others * r,
+                            note="scatter-add into dense output")
+        if path == "hypersparse":
+            # sort + segment-sum into ≤ m compressed keys, then densified for
+            # the einsum (dense-output) contract; Θ(m) storage until then
+            return PathCost(path, m * r,
+                            base_in + _sort_traffic(int(m), n - 1) +
+                            m * r + others * r,
+                            note="compressed-key output, then densified")
+        if path == "dense":
+            d = _dense_size(ir)
+            return PathCost(path, d * r, d + base_in + others * r)
+
+    if ir.kind == pir.MTTKRP:
+        out_words = float(math.prod(shape[d] for d in ir.keep_modes) or 1) * r
+        base_in = coo_words + _factor_words(ir)
+        if path == "all_at_once":
+            return PathCost(path, m * r * nf, base_in + m * r + out_words,
+                            note="gather-product-segment-sum")
+        if path == "bucketed":
+            # Dispatch re-runs the host-side bucketize on every call (and
+            # falls back to all_at_once under jit), so the per-call cost is
+            # always charged here — this path stays forcible for experiments
+            # but is never cost-preferred. The production TPU route is
+            # ingest-time bucketing + kernels.ops.mttkrp_bucketed directly.
+            return PathCost(path, m * r * nf,
+                            base_in + m * r + out_words + _sort_traffic(int(m), 1),
+                            note="per-call host bucketize + bucketed kernel")
+        if path == "t_first":
+            mode = ir.keep_modes[0]
+            last = [d for d in range(n) if d != mode][-1]
+            flops = m * r + m * r * max(nf - 1, 1)
+            mem = (base_in + _sort_traffic(int(m), n - 1) + m * r + out_words)
+            return PathCost(path, flops, mem,
+                            note=f"hypersparse TTM over mode {last} first")
+        if path == "kr_first":
+            mode = ir.keep_modes[0]
+            k = float(math.prod(shape[d] for d in range(n) if d != mode))
+            flops = k * r * max(nf - 1, 1) + m * r
+            return PathCost(path, flops, base_in + k * r + out_words,
+                            note="dense Khatri-Rao intermediate, Θ(K·R) memory")
+        if path == "dense":
+            d = _dense_size(ir)
+            return PathCost(path, d * r, d + base_in + out_words)
+
+    raise ValueError(f"no cost formula for kind={ir.kind!r} path={path!r}")
+
+
+def _sliced_h(r: int) -> int:
+    """Static H for the sliced TTTP schedule: largest of {4, 2, 1} dividing R."""
+    for h in (4, 2):
+        if r % h == 0:
+            return h
+    return 1
+
+
+def rank_paths(ir: pir.ContractionIR) -> Tuple[PathCost, ...]:
+    """All candidates, cheapest-first (deterministic tie-break)."""
+    costs = [estimate(ir, p) for p in candidate_paths(ir)]
+    return tuple(sorted(costs, key=lambda c: (c.seconds,
+                                              _TIE_ORDER.index(c.path))))

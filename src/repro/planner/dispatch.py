@@ -1,0 +1,184 @@
+"""Plan dispatcher — lowers a chosen (IR, path) onto the kernel library.
+
+Each contraction family maps onto ``repro.sparse.ops`` / ``repro.kernels``
+(which internally select the Pallas kernels when their block-size
+preconditions hold, jnp fallbacks otherwise):
+
+* REDUCE  → linearized multi-mode segment-sum (arbitrary kept-mode subsets);
+* TTTP    → ``kernels.ops.tttp`` (Pallas/ref), pairwise or H-sliced variants;
+* TTM     → dense-output scatter-add or hypersparse compressed-key kernel;
+* MTTKRP  → all-at-once gather–product–segment-sum, CCSR-bucketed kernel,
+  pairwise T-first / KR-first, or the generalized multi-output-mode form.
+
+Every path of a given IR computes the same einsum, so forcing paths is a
+numerical no-op (tested in ``tests/test_planner.py``). All jnp paths are
+jit-safe; the ``bucketed`` path needs host-side bucketing and silently falls
+back to ``all_at_once`` under tracing.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tttp as core_tttp
+from repro.core.sparse_tensor import SparseTensor
+from repro.core.utils import linearize
+from repro.kernels import ops as kops
+from repro.planner import ir as pir
+from repro.planner.cost import _sliced_h
+from repro.sparse import ops as sops
+from repro.sparse.ccsr import bucketize
+
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def _split_operands(ir: pir.ContractionIR, operands: Sequence):
+    st = operands[ir.sparse_pos]
+    dense_ops = [operands[i] for i in ir.dense_positions]
+    return st, dense_ops
+
+
+def _factors_by_mode(ir: pir.ContractionIR,
+                     dense_ops: Sequence[jax.Array]) -> List[Optional[jax.Array]]:
+    """Length-N factor list with None at uncovered modes."""
+    factors: List[Optional[jax.Array]] = [None] * len(ir.sparse.shape)
+    for mode, f in zip(ir.factor_modes, dense_ops):
+        factors[mode] = f
+    return factors
+
+
+def _reorder(res: jax.Array, canon: str, out: str) -> jax.Array:
+    """Transpose a result with axis order ``canon`` into axis order ``out``."""
+    if canon == out:
+        return res
+    return jnp.transpose(res, tuple(canon.index(c) for c in out))
+
+
+def _densified_einsum(ir: pir.ContractionIR, st: SparseTensor,
+                      dense_ops: Sequence) -> jax.Array:
+    """Dense fallback preserving the original operand order (the sparse
+    operand need not be first)."""
+    args: List = [None] * len(ir.operands)
+    args[ir.sparse_pos] = st.todense()
+    for pos, op in zip(ir.dense_positions, dense_ops):
+        args[pos] = op
+    return jnp.einsum(ir.expr, *args)
+
+
+# ---------------------------------------------------------------------------
+# per-kind executors
+# ---------------------------------------------------------------------------
+
+def _exec_reduce(ir: pir.ContractionIR, st: SparseTensor, path: str):
+    if path == "dense" and st.dense_dim is None:
+        return _densified_einsum(ir, st, ())
+    # trailing-dense values ride along unreduced (reduce_mode semantics);
+    # the densify fallback cannot express them, so it also lands here
+    if not ir.keep_modes:
+        return st.sum()
+    kept_shape = tuple(st.shape[d] for d in ir.keep_modes)
+    k = int(math.prod(kept_shape))
+    lin = linearize(st.indices[:, list(ir.keep_modes)], kept_shape)
+    out = jax.ops.segment_sum(st.masked_values(), lin, num_segments=k)
+    return out.reshape(kept_shape + out.shape[1:])
+
+
+def _exec_tttp(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
+    factors = _factors_by_mode(ir, dense_ops)
+    if path == "all_at_once":
+        return kops.tttp(st, factors)
+    if path == "sliced":
+        return core_tttp.tttp_sliced(st, factors, _sliced_h(ir.rank_size))
+    if path == "pairwise":
+        return core_tttp.tttp_pairwise(st, factors)
+    if path == "dense":
+        # Form the dense multilinear model over the covered modes only and
+        # sample it per entry. (Gathering from a densified *result* would
+        # double-count duplicate COO coordinates.)
+        s_term = ir.sparse_term
+        covered = sorted(ir.factor_modes)
+        model_out = "".join(s_term[d] for d in covered)
+        terms = [ir.operands[i].term for i in ir.dense_positions]
+        model = jnp.einsum(",".join(terms) + "->" + model_out, *dense_ops)
+        vals = st.values * model[tuple(st.indices[:, d] for d in covered)]
+        return st.with_values(vals)
+    raise ValueError(f"unknown TTTP path {path!r}")
+
+
+def _exec_ttm(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
+    (w,) = dense_ops
+    mode = ir.contract_mode
+    s_term = ir.sparse_term
+    canon = "".join(c for c in s_term if s_term.index(c) != mode) + ir.rank_index
+    if path == "dense_output":
+        res = sops.ttm_dense_output(st, w, mode)
+    elif path == "hypersparse":
+        res = sops.ttm_hypersparse(st, w, mode).todense()
+    elif path == "dense":
+        return _densified_einsum(ir, st, dense_ops)
+    else:
+        raise ValueError(f"unknown TTM path {path!r}")
+    return _reorder(res, canon, ir.out)
+
+
+def _mttkrp_general(ir: pir.ContractionIR, st: SparseTensor,
+                    factors: Sequence[Optional[jax.Array]]) -> jax.Array:
+    """All-at-once partial MTTKRP with any kept-mode subset: gather factor
+    rows, multiply, segment-sum over the linearized kept key."""
+    prod = st.masked_values()[:, None]
+    for d, f in enumerate(factors):
+        if f is not None:
+            prod = prod * f[st.indices[:, d]]
+    kept_shape = tuple(st.shape[d] for d in ir.keep_modes)
+    k = int(math.prod(kept_shape)) if kept_shape else 1
+    lin = linearize(st.indices[:, list(ir.keep_modes)], kept_shape)
+    res = jax.ops.segment_sum(prod, lin, num_segments=k)
+    return res.reshape(kept_shape + (res.shape[-1],))
+
+
+def _exec_mttkrp(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
+    if path == "dense":
+        return _densified_einsum(ir, st, dense_ops)
+    factors = _factors_by_mode(ir, dense_ops)
+    out_sparse = ir.out.replace(ir.rank_index, "")
+    canon = out_sparse + ir.rank_index           # kept modes in out order, r last
+    if not pir.is_classic_mttkrp(ir):
+        if path != "all_at_once":
+            raise ValueError(f"path {path!r} requires the classic MTTKRP "
+                             f"shape (one kept mode, all others contracted)")
+        return _reorder(_mttkrp_general(ir, st, factors), canon, ir.out)
+    mode = ir.keep_modes[0]
+    if path == "bucketed" and not (_is_tracer(st.indices) or
+                                   _is_tracer(st.values)):
+        buckets = bucketize(st, mode, block_rows=8)
+        res = kops.mttkrp_bucketed(buckets, factors, num_rows=st.shape[mode])
+    elif path in ("all_at_once", "bucketed"):
+        res = sops.mttkrp(st, factors, mode)     # bucketed falls back in jit
+    elif path == "t_first":
+        res = sops.mttkrp_pairwise_t_first(st, factors, mode)
+    elif path == "kr_first":
+        res = sops.mttkrp_pairwise_kr_first(st, factors, mode)
+    else:
+        raise ValueError(f"unknown MTTKRP path {path!r}")
+    return _reorder(res, canon, ir.out)
+
+
+def execute(ir: pir.ContractionIR, path: str, operands: Sequence):
+    """Run the contraction along ``path``. Operand list must match the IR."""
+    if ir.kind == pir.DENSE:
+        return jnp.einsum(ir.expr, *operands)
+    st, dense_ops = _split_operands(ir, operands)
+    if ir.kind == pir.REDUCE:
+        return _exec_reduce(ir, st, path)
+    if ir.kind == pir.TTTP:
+        return _exec_tttp(ir, st, dense_ops, path)
+    if ir.kind == pir.TTM:
+        return _exec_ttm(ir, st, dense_ops, path)
+    if ir.kind == pir.MTTKRP:
+        return _exec_mttkrp(ir, st, dense_ops, path)
+    raise ValueError(f"unknown IR kind {ir.kind!r}")

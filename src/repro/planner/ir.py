@@ -1,0 +1,220 @@
+"""Einsum IR — typed contraction nodes over mixed sparse/dense operands.
+
+Parses an einsum expression plus the concrete operand list into a
+:class:`ContractionIR`, classifying it into one of the contraction families
+the paper's kernels cover (DESIGN.md §5.1):
+
+* ``DENSE``  — no sparse operand; delegated to ``jnp.einsum`` untouched;
+* ``REDUCE`` — one sparse operand, output indices an arbitrary ordered subset
+  of the sparse term (``"ijkl->li"``, ``"ijk->"``);
+* ``TTTP``   — output equals the sparse term: the sampled multilinear form
+  ``t_n · Σ_r Π_d A_d[i_d, r]`` (SDDMM is the order-2 case);
+* ``TTM``    — one dense matrix contracting one sparse mode, dense output
+  (``"ijk,kr->ijr"``, any output order, any tensor order);
+* ``MTTKRP`` — ≥2 rank-sharing factor matrices contracting a subset of the
+  sparse modes; covers the classic single-output-mode MTTKRP and the partial
+  / multi-output-mode generalization (``"ijkl,kr,lr->ijr"``).
+
+The IR is built from *static* metadata only (terms, shapes, capacities, nnz
+hints, dtypes) so construction is safe at jax trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.sparse_tensor import SparseTensor
+
+DENSE = "dense"
+REDUCE = "reduce"
+TTTP = "tttp"
+TTM = "ttm"
+MTTKRP = "mttkrp"
+
+KINDS = (DENSE, REDUCE, TTTP, TTM, MTTKRP)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandInfo:
+    """Static description of one einsum operand."""
+    term: str                  # its index string
+    is_sparse: bool
+    shape: Tuple[int, ...]
+    cap: Optional[int]         # padded capacity (sparse only)
+    nnz: Optional[int]         # static nonzero hint (sparse only; ≤ cap)
+    dtype: str
+    dense_dim: Optional[int] = None  # trailing dense axis size (sparse only)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionIR:
+    """A classified contraction. ``sizes`` maps index letters to extents."""
+    expr: str
+    kind: str
+    operands: Tuple[OperandInfo, ...]
+    out: str
+    sizes: Tuple[Tuple[str, int], ...]
+    sparse_pos: Optional[int] = None
+    # sparse-pattern metadata (unused fields left at defaults):
+    keep_modes: Tuple[int, ...] = ()        # REDUCE/MTTKRP: kept sparse modes,
+                                            #   ordered as they appear in out
+    rank_index: Optional[str] = None        # TTTP/TTM/MTTKRP rank letter
+    factor_modes: Tuple[int, ...] = ()      # sparse mode matched by each
+                                            #   dense factor, in operand order
+    contract_mode: Optional[int] = None     # TTM: the contracted sparse mode
+
+    # -- helpers -----------------------------------------------------------
+    def size_of(self, idx: str) -> int:
+        return dict(self.sizes)[idx]
+
+    @property
+    def sparse(self) -> Optional[OperandInfo]:
+        return None if self.sparse_pos is None else self.operands[self.sparse_pos]
+
+    @property
+    def sparse_term(self) -> str:
+        return self.operands[self.sparse_pos].term
+
+    @property
+    def nnz(self) -> int:
+        """Best static nonzero estimate: the nnz hint, else the capacity."""
+        sp = self.sparse
+        return sp.nnz if sp.nnz is not None else sp.cap
+
+    @property
+    def rank_size(self) -> int:
+        return 1 if self.rank_index is None else self.size_of(self.rank_index)
+
+    @property
+    def dense_positions(self) -> Tuple[int, ...]:
+        return tuple(i for i, op in enumerate(self.operands)
+                     if not op.is_sparse)
+
+
+def _operand_info(term: str, op) -> OperandInfo:
+    if isinstance(op, SparseTensor):
+        return OperandInfo(term, True, tuple(op.shape), op.cap, op.nnz,
+                           str(op.values.dtype), op.dense_dim)
+    return OperandInfo(term, False, tuple(op.shape), None, None,
+                       str(op.dtype))
+
+
+def normalize(expr: str) -> str:
+    return expr.replace(" ", "")
+
+
+def build_ir(expr: str, operands: Sequence) -> ContractionIR:
+    """Parse + classify. Raises ``ValueError`` on malformed expressions and
+    ``NotImplementedError`` on patterns outside the supported families."""
+    expr = normalize(expr)
+    if "->" not in expr:
+        raise ValueError(f"einsum expression must be explicit (have '->'): {expr!r}")
+    lhs, out = expr.split("->")
+    terms = lhs.split(",")
+    if len(terms) != len(operands):
+        raise ValueError(f"{expr!r}: {len(terms)} terms but "
+                         f"{len(operands)} operands")
+    infos = tuple(_operand_info(t, op) for t, op in zip(terms, operands))
+
+    sizes: Dict[str, int] = {}
+    for info in infos:
+        if len(info.term) != len(info.shape):
+            raise ValueError(f"term {info.term!r} has {len(info.term)} indices "
+                             f"but operand has shape {info.shape}")
+        if len(set(info.term)) != len(info.term):
+            raise NotImplementedError(
+                f"repeated index within a term is unsupported: {info.term!r}")
+        for c, s in zip(info.term, info.shape):
+            if sizes.setdefault(c, int(s)) != int(s):
+                raise ValueError(f"index {c!r} has conflicting sizes "
+                                 f"{sizes[c]} and {s} in {expr!r}")
+    for c in out:
+        if c not in sizes:
+            raise ValueError(f"output index {c!r} not in any input term")
+    if len(set(out)) != len(out):
+        raise NotImplementedError(f"repeated output index unsupported: {out!r}")
+    size_items = tuple(sorted(sizes.items()))
+
+    sparse_positions = [i for i, info in enumerate(infos) if info.is_sparse]
+    if not sparse_positions:
+        return ContractionIR(expr, DENSE, infos, out, size_items)
+    if len(sparse_positions) > 1:
+        raise NotImplementedError(
+            "contractions with multiple sparse operands are not supported "
+            "yet (the planner handles a single sparse operand)")
+    spos = sparse_positions[0]
+    s_term = infos[spos].term
+    dense_infos = [(i, info) for i, info in enumerate(infos) if i != spos]
+
+    if infos[spos].dense_dim is not None and dense_infos:
+        raise NotImplementedError(
+            "a SparseTensor with a trailing dense axis is only supported in "
+            "reductions (the trailing axis rides along unreduced)")
+
+    # ---- single sparse operand, no dense: mode-subset reduction ----------
+    if not dense_infos:
+        if not set(out) <= set(s_term):
+            raise ValueError(f"output {out!r} not a subset of {s_term!r}")
+        keep = tuple(s_term.index(c) for c in out)
+        return ContractionIR(expr, REDUCE, infos, out, size_items,
+                             sparse_pos=spos, keep_modes=keep)
+
+    # ---- factor-matrix families: every dense term is (mode, rank) --------
+    new_idx = {c for _, info in dense_infos for c in info.term
+               if c not in s_term}
+    if len(new_idx) != 1:
+        raise NotImplementedError(
+            f"expected exactly one rank index shared by the dense factors, "
+            f"got {sorted(new_idx)} in {expr!r}")
+    (r_idx,) = new_idx
+    factor_modes = []
+    for _, info in dense_infos:
+        t = info.term
+        if len(t) != 2 or t[1] != r_idx or t[0] not in s_term:
+            raise NotImplementedError(
+                f"dense operand term {t!r} is not a ({{sparse mode}}, "
+                f"{r_idx!r}) factor matrix in {expr!r}")
+        factor_modes.append(s_term.index(t[0]))
+    if len(set(factor_modes)) != len(factor_modes):
+        raise NotImplementedError(
+            f"two factors contract the same sparse mode in {expr!r}")
+    factor_modes = tuple(factor_modes)
+
+    # TTTP / SDDMM: output pattern equals the sparse pattern
+    if out == s_term:
+        return ContractionIR(expr, TTTP, infos, out, size_items,
+                             sparse_pos=spos, rank_index=r_idx,
+                             factor_modes=factor_modes)
+
+    # TTM / MTTKRP: rank index appears in the output, contracted sparse
+    # modes are exactly the factor-covered ones
+    if r_idx not in out:
+        raise NotImplementedError(
+            f"rank index {r_idx!r} neither reduced as TTTP nor kept in the "
+            f"output in {expr!r}")
+    out_sparse = out.replace(r_idx, "")
+    if not set(out_sparse) <= set(s_term):
+        raise ValueError(f"output indices {out_sparse!r} not all in sparse "
+                         f"term {s_term!r}")
+    contracted = set(s_term) - set(out_sparse)
+    covered = {s_term[m] for m in factor_modes}
+    if covered != contracted:
+        raise NotImplementedError(
+            f"factors cover modes {sorted(covered)} but the contracted "
+            f"sparse modes are {sorted(contracted)} in {expr!r}")
+    keep = tuple(s_term.index(c) for c in out_sparse)
+    if len(dense_infos) == 1:
+        return ContractionIR(expr, TTM, infos, out, size_items,
+                             sparse_pos=spos, keep_modes=keep,
+                             rank_index=r_idx, factor_modes=factor_modes,
+                             contract_mode=factor_modes[0])
+    return ContractionIR(expr, MTTKRP, infos, out, size_items,
+                         sparse_pos=spos, keep_modes=keep,
+                         rank_index=r_idx, factor_modes=factor_modes)
+
+
+def is_classic_mttkrp(ir: ContractionIR) -> bool:
+    """True for the paper's MTTKRP: one kept mode, factors on all others —
+    the only shape the pairwise and bucketed kernels implement."""
+    return (ir.kind == MTTKRP and len(ir.keep_modes) == 1 and
+            len(ir.factor_modes) == len(ir.sparse.shape) - 1)

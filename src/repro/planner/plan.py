@@ -1,0 +1,142 @@
+"""Plan construction + caching + optional one-shot autotuning.
+
+A :class:`Plan` binds a classified :class:`~repro.planner.ir.ContractionIR`
+to a chosen execution path with the full cost ranking attached. Plans are
+cached on the *static signature* of the call (DESIGN.md §5.3):
+
+    (normalized expr, per-operand (kind, shape, cap, nnz, dtype), override)
+
+so planning happens once per (expression, operand layout) — identical calls
+return the *identical* Plan object, and the key never touches array data,
+making ``plan_contraction`` safe to call at jax trace time.
+
+``autotune=True`` upgrades a plan by timing every candidate path once on the
+provided operands (skipped under tracing, where no concrete data exists) and
+pinning the measured winner; the timings are stored on the plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+
+from repro.planner import cost as pcost
+from repro.planner import dispatch as pdispatch
+from repro.planner import ir as pir
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An executable contraction plan (immutable; shared via the cache)."""
+    ir: pir.ContractionIR
+    path: str
+    ranking: Tuple[pcost.PathCost, ...]   # all candidates, cheapest first
+    autotuned: bool = False
+    timings: Optional[Tuple[Tuple[str, float], ...]] = None  # (path, seconds)
+
+    @property
+    def candidates(self) -> Tuple[str, ...]:
+        return tuple(c.path for c in self.ranking)
+
+    def cost(self, path: Optional[str] = None) -> pcost.PathCost:
+        path = path or self.path
+        for c in self.ranking:
+            if c.path == path:
+                return c
+        raise KeyError(path)
+
+    def execute(self, operands: Sequence):
+        return pdispatch.execute(self.ir, self.path, operands)
+
+
+def _signature(expr: str, operands: Sequence,
+               path: Optional[str]) -> Tuple:
+    sig = []
+    for op in operands:
+        if hasattr(op, "cap") and hasattr(op, "indices"):  # SparseTensor
+            sig.append(("sparse", tuple(op.shape), op.cap, op.nnz,
+                        str(op.values.dtype), op.dense_dim))
+        else:
+            # plans are value-independent, so a degenerate signature for
+            # non-array operands (lists/scalars) is harmless
+            sig.append(("dense", tuple(getattr(op, "shape", ())),
+                        str(getattr(op, "dtype", type(op).__name__))))
+    return (pir.normalize(expr), tuple(sig), path)
+
+
+_CACHE: Dict[Tuple, Plan] = {}
+
+# candidates whose estimated memory traffic exceeds this (in words) are not
+# timed during autotuning — ~1 GiB of f32, far above any sane transient
+AUTOTUNE_MEM_BUDGET_WORDS = 2 ** 28
+
+
+def clear_plan_cache() -> None:
+    _CACHE.clear()
+
+
+def plan_cache_size() -> int:
+    return len(_CACHE)
+
+
+def _any_tracer(operands: Sequence) -> bool:
+    for op in operands:
+        arrays = ((op.indices, op.values) if isinstance(op, pir.SparseTensor)
+                  else (op,))
+        if any(isinstance(a, jax.core.Tracer) for a in arrays):
+            return True
+    return False
+
+
+def _time_path(ir: pir.ContractionIR, path: str, operands: Sequence,
+               iters: int = 3) -> float:
+    def run():
+        return jax.block_until_ready(pdispatch.execute(ir, path, operands))
+    run()                                    # warmup / compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def plan_contraction(expr: str, operands: Sequence,
+                     path: Optional[str] = None,
+                     autotune: bool = False) -> Plan:
+    """Plan (or fetch the cached plan for) one einsum call.
+
+    ``path`` forces a specific candidate (validated against the IR);
+    ``autotune`` measures all candidates once and pins the winner.
+    """
+    key = _signature(expr, operands, path)
+    cached = _CACHE.get(key)
+    if cached is not None and (path is not None or cached.autotuned
+                               or not autotune):
+        return cached
+
+    ir = pir.build_ir(expr, operands)
+    ranking = pcost.rank_paths(ir)
+    candidates = tuple(c.path for c in ranking)
+    if path is not None:
+        # a forced path makes autotuning moot — the plan is final
+        if path not in candidates:
+            raise ValueError(f"path {path!r} not legal for {expr!r}; "
+                             f"candidates: {candidates}")
+        plan = Plan(ir, path, ranking)
+    elif autotune and not _any_tracer(operands):
+        # only time candidates whose estimated footprint is sane — the dense
+        # and KR-first fallbacks explode at low density and would OOM here
+        feasible = [c.path for c in ranking
+                    if c.mem <= AUTOTUNE_MEM_BUDGET_WORDS]
+        if not feasible:
+            feasible = [ranking[0].path]
+        timings = tuple((p, _time_path(ir, p, operands)) for p in feasible)
+        winner = min(timings, key=lambda t: t[1])[0]
+        plan = Plan(ir, winner, ranking, autotuned=True, timings=timings)
+    else:
+        plan = Plan(ir, ranking[0].path, ranking)
+    _CACHE[key] = plan
+    return plan

@@ -124,7 +124,10 @@ def test_distributed_equivalence_subprocess(tmp_path):
     script = tmp_path / "dist_check.py"
     script.write_text(_SCRIPT)
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    # force the host (CPU) platform: the XLA_FLAGS device-count override only
+    # applies to it, and letting jax probe an accelerator plugin here burns
+    # minutes in init retries on accelerator-less CI machines
+    env["JAX_PLATFORMS"] = "cpu"
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
     out = subprocess.run([sys.executable, str(script)], env=env,
@@ -186,7 +189,7 @@ def test_rowsharded_factors_subprocess(tmp_path):
     script = tmp_path / "rowshard_check.py"
     script.write_text(_ROWSHARD_SCRIPT)
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"    # see test_distributed_equivalence_subprocess
     out = subprocess.run([sys.executable, str(script)], env=env,
                          capture_output=True, text=True, timeout=900,
                          cwd=os.path.dirname(os.path.dirname(__file__)))

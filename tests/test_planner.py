@@ -1,0 +1,256 @@
+"""Planner subsystem: IR classification, path equivalence, plan caching,
+and the paper-§5.3 cost-model ranking (DESIGN.md §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.api as ctf
+from repro import planner
+from repro.core.sparse_tensor import SparseTensor
+from repro.planner import ir as pir
+
+
+def _sparse(shape, nnz, seed=0, cap=None):
+    return SparseTensor.random(jax.random.PRNGKey(seed), shape, nnz, cap=cap)
+
+
+def _factor(dim, r, seed):
+    return jax.random.normal(jax.random.PRNGKey(100 + seed), (dim, r))
+
+
+def _operands(expr, shape, nnz, r, seed=0):
+    """Build (sparse, dense factors...) operands for a one-sparse expr."""
+    lhs, _ = expr.replace(" ", "").split("->")
+    terms = lhs.split(",")
+    st = _sparse(shape, nnz, seed)
+    sizes = dict(zip(terms[0], shape))
+    dense = [_factor(sizes[t[0]], r, i) for i, t in enumerate(terms[1:])]
+    return (st, *dense)
+
+
+# every supported pattern family, order 3 through 5
+PATTERNS = [
+    ("ijk,jr,kr->ir", (13, 11, 7)),          # classic MTTKRP, order 3
+    ("ijk,jr,kr->ri", (13, 11, 7)),          # ... rank-first output
+    ("ijk,ir,kr->jr", (13, 11, 7)),          # ... middle mode
+    ("ijkl,jr,kr,lr->ir", (9, 8, 7, 6)),     # classic MTTKRP, order 4
+    ("abcde,br,cr,dr,er->ar", (7, 6, 5, 4, 3)),  # classic MTTKRP, order 5
+    ("ijkl,kr,lr->ijr", (9, 8, 7, 6)),       # partial MTTKRP, multi-out
+    ("ijkl,kr,lr->jir", (9, 8, 7, 6)),       # ... permuted output
+    ("ijk,ir,jr,kr->r", (13, 11, 7)),        # full contraction onto rank
+    ("ijk,kr->ijr", (13, 11, 7)),            # TTM
+    ("ijkl,jr->ilkr", (9, 8, 7, 6)),         # TTM, middle mode + permuted out
+    ("ijk,ir,jr,kr->ijk", (13, 11, 7)),      # TTTP
+    ("ij,ir,jr->ij", (20, 15)),              # SDDMM (order-2 TTTP)
+    ("ijk,ir,kr->ijk", (13, 11, 7)),         # partial TTTP
+    ("ijk->i", (13, 11, 7)),                 # single-mode reduction
+    ("ijkl->il", (9, 8, 7, 6)),              # multi-mode subset reduction
+    ("ijkl->li", (9, 8, 7, 6)),              # ... permuted output
+    ("ijk->", (13, 11, 7)),                  # full reduction
+]
+
+
+@pytest.mark.parametrize("expr,shape", PATTERNS, ids=[p[0] for p in PATTERNS])
+def test_every_path_matches_dense_einsum(expr, shape):
+    """Forcing each candidate path produces the dense-reference result."""
+    ops = _operands(expr, shape, nnz=60, r=4)
+    st = ops[0]
+    dense_ops = (st.todense(), *ops[1:])
+    want = jnp.einsum(expr, *dense_ops)
+    plan = ctf.plan(expr, *ops)
+    assert len(plan.candidates) >= 1
+    for path in plan.candidates:
+        got = ctf.einsum(expr, *ops, path=path)
+        if isinstance(got, SparseTensor):
+            got = got.todense()
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{expr} via {path}")
+
+
+def test_reduce_with_trailing_dense_axis():
+    """reduce_mode semantics survive the planner: a (cap, R)-valued
+    SparseTensor reduces with the trailing axis riding along."""
+    st = _sparse((13, 11, 7), 50)
+    stR = st.with_values(jnp.broadcast_to(st.values[:, None],
+                                          (st.cap, 4)) * jnp.arange(1.0, 5.0))
+    got = ctf.einsum("ijk->i", stR)
+    np.testing.assert_allclose(got, stR.reduce_mode(0), rtol=1e-6, atol=1e-6)
+    assert got.shape == (13, 4)
+    # and factor-contracting kinds reject it with a clear error
+    with pytest.raises(NotImplementedError):
+        ctf.einsum("ijk,jr,kr->ir", stR, _factor(11, 4, 0), _factor(7, 4, 1))
+
+
+def test_tttp_default_path_is_all_at_once():
+    """Paper Fig. 6: the fused all-at-once kernel is the default TTTP route."""
+    ops = _operands("ijk,ir,jr,kr->ijk", (13, 11, 7), nnz=60, r=4)
+    assert ctf.plan("ijk,ir,jr,kr->ijk", *ops).path == "all_at_once"
+
+
+def test_pure_dense_delegates():
+    a = jax.random.normal(jax.random.PRNGKey(0), (5, 6))
+    b = jax.random.normal(jax.random.PRNGKey(1), (6, 7))
+    np.testing.assert_allclose(ctf.einsum("ij,jk->ik", a, b), a @ b,
+                               rtol=1e-5, atol=1e-5)
+    # jnp.einsum accepts lists/scalars; the planner shim must too
+    np.testing.assert_allclose(ctf.einsum("i,i->", [1.0, 2.0], [3.0, 4.0]),
+                               11.0, rtol=1e-6)
+
+
+def test_sparse_operand_not_first():
+    """The sparse operand may sit anywhere in the operand list."""
+    st = _sparse((13, 11, 7), 50)
+    v, w = _factor(11, 4, 0), _factor(7, 4, 1)
+    want = jnp.einsum("jr,ijk,kr->ir", v, st.todense(), w)
+    plan = ctf.plan("jr,ijk,kr->ir", v, st, w)
+    for path in plan.candidates:
+        got = ctf.einsum("jr,ijk,kr->ir", v, st, w, path=path)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"sparse-mid via {path}")
+
+
+def test_ir_classification():
+    st = _sparse((13, 11, 7), 50)
+    v, w = _factor(11, 4, 0), _factor(7, 4, 1)
+    assert planner.build_ir("ijk,jr,kr->ir", (st, v, w)).kind == pir.MTTKRP
+    assert planner.build_ir("ijk,kr->ijr", (st, w)).kind == pir.TTM
+    assert planner.build_ir("ijk->ik", (st,)).kind == pir.REDUCE
+    u = _factor(13, 4, 2)
+    assert planner.build_ir("ijk,ir,jr,kr->ijk", (st, u, v, w)).kind == pir.TTTP
+    assert planner.build_ir("ij,jk->ik", (v, w.T)).kind == pir.DENSE
+
+
+def test_ir_rejects_unsupported():
+    st = _sparse((13, 11, 7), 50)
+    st2 = _sparse((13, 11, 7), 50, seed=1)
+    v = _factor(11, 4, 0)
+    with pytest.raises(NotImplementedError):
+        planner.build_ir("ijk,ijk->ijk", (st, st2))  # two sparse operands
+    with pytest.raises(ValueError):
+        planner.build_ir("ijk,jr,kr->ir", (st, v))   # operand count mismatch
+    with pytest.raises(ValueError):
+        ctf.einsum("ijk,jr,kr->ir", st, v, _factor(7, 4, 1),
+                   path="not_a_path")
+
+
+def test_plan_cache_identity():
+    """Identical static signatures return the *identical* plan object."""
+    planner.clear_plan_cache()
+    st = _sparse((13, 11, 7), 50)
+    v, w = _factor(11, 4, 0), _factor(7, 4, 1)
+    p1 = ctf.plan("ijk,jr,kr->ir", st, v, w)
+    p2 = ctf.plan("ijk, jr, kr -> ir", st, v, w)     # whitespace-insensitive
+    assert p1 is p2
+    assert planner.plan_cache_size() == 1
+    # same shapes but different values: still the same static signature
+    st_b = _sparse((13, 11, 7), 50, seed=9)
+    assert ctf.plan("ijk,jr,kr->ir", st_b, v, w) is p1
+    # different nnz hint ⇒ different signature ⇒ fresh plan
+    st_c = _sparse((13, 11, 7), 40, cap=50)
+    assert ctf.plan("ijk,jr,kr->ir", st_c, v, w) is not p1
+
+
+def test_cost_ranking_hypersparse_prefers_all_at_once():
+    """Paper §5.3: at density ≤ 1e-6 the dense-KR intermediate explodes, so
+    all-at-once must beat pairwise KR-first (and be the chosen path)."""
+    dim, nnz = 4700, 100_000
+    st = _sparse((dim, dim, dim), nnz)
+    density = nnz / dim ** 3
+    assert density <= 1e-6
+    f = jnp.zeros((dim, 32))
+    plan = ctf.plan("ijk,jr,kr->ir", st, f, f)
+    assert plan.cost("all_at_once").seconds < plan.cost("kr_first").seconds
+    assert plan.cost("all_at_once").seconds < plan.cost("t_first").seconds
+    assert plan.path == "all_at_once"
+
+
+def test_cost_model_covers_every_candidate():
+    for expr, shape in PATTERNS:
+        ops = _operands(expr, shape, nnz=30, r=4)
+        ir = planner.build_ir(expr, ops)
+        for path in planner.candidate_paths(ir):
+            c = planner.estimate(ir, path)
+            assert c.flops >= 0 and c.mem > 0 and c.seconds > 0
+
+
+def test_autotune_pins_a_measured_winner():
+    planner.clear_plan_cache()
+    ops = _operands("ijk,jr,kr->ir", (13, 11, 7), nnz=60, r=4)
+    plan = planner.plan_contraction("ijk,jr,kr->ir", ops, autotune=True)
+    assert plan.autotuned and plan.timings
+    assert plan.path in plan.candidates
+    assert {p for p, _ in plan.timings} == set(plan.candidates)
+    # the autotuned plan is cached and reused
+    assert planner.plan_contraction("ijk,jr,kr->ir", ops, autotune=True) is plan
+    # a forced path makes autotune moot and still caches (identity holds)
+    forced = planner.plan_contraction("ijk,jr,kr->ir", ops, path="t_first",
+                                      autotune=True)
+    assert forced.path == "t_first" and not forced.autotuned
+    assert planner.plan_contraction("ijk,jr,kr->ir", ops, path="t_first",
+                                    autotune=True) is forced
+
+
+def test_planned_dispatch_under_jit():
+    """Planning at trace time: static signature only, bucketed falls back."""
+    st = _sparse((13, 11, 7), 60)
+    v, w = _factor(11, 4, 0), _factor(7, 4, 1)
+    want = jnp.einsum("ijk,jr,kr->ir", st.todense(), v, w)
+    for path in (None, "all_at_once", "t_first", "kr_first", "bucketed"):
+        f = jax.jit(lambda t, a, b: ctf.einsum("ijk,jr,kr->ir", t, a, b,
+                                               path=path))
+        np.testing.assert_allclose(f(st, v, w), want, rtol=1e-5, atol=1e-5)
+
+
+def test_solver_path_overrides_match_default():
+    """ALS / CCD / GCP produce identical results with planner dispatch."""
+    from repro.core.completion import als, ccd, gcp
+    from repro.core.losses import LOSSES
+    key = jax.random.PRNGKey(0)
+    st = _sparse((12, 10, 8), 120)
+    omega = st.with_values(jnp.ones_like(st.values) * st.mask)
+    r = 4
+    fs = [jax.random.normal(jax.random.fold_in(key, d), (s, r)) * 0.3
+          for d, s in enumerate(st.shape)]
+
+    base = als.als_sweep(st, omega, fs, lam=0.1)
+    planned = als.als_sweep(st, omega, fs, lam=0.1, mttkrp_path="t_first")
+    for a, b in zip(base, planned):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    # the override must also reach the H-sliced matvec schedule
+    sliced = als.als_sweep(st, omega, fs, lam=0.1, h_slices=2,
+                           mttkrp_path="t_first")
+    for a, b in zip(base, sliced):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    rho = ccd.residual_values(st, fs)
+    f1, rho1 = ccd.ccd_sweep_tttp(st, fs, rho, lam=0.1)
+    f2, rho2 = ccd.ccd_sweep_tttp(st, fs, rho, lam=0.1, tttp_path="pairwise")
+    for a, b in zip(f1, f2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(rho1, rho2, rtol=1e-4, atol=1e-4)
+
+    loss = LOSSES["quadratic"]
+    g1 = gcp.gcp_gradients(st, fs, loss, lam=0.1)
+    g2 = gcp.gcp_gradients(st, fs, loss, lam=0.1, mttkrp_path="all_at_once")
+    g3 = gcp.gcp_gradients(st, fs, loss, lam=0.1, mttkrp_path="kr_first")
+    for a, b, c in zip(g1, g2, g3):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+def test_tttp_shim_none_and_vector_factors():
+    """api.TTTP keeps the paper's Listing-3 surface through the planner."""
+    T = _sparse((12, 10, 8), 100)
+    U, V, W = (jnp.ones((12, 4)), jnp.ones((10, 4)), jnp.ones((8, 4)))
+    S = ctf.TTTP(T, [U, V, W])
+    np.testing.assert_allclose(S.masked_values(), 4.0 * T.masked_values(),
+                               rtol=1e-6)
+    S2 = ctf.TTTP(T, [U, None, W])
+    np.testing.assert_allclose(S2.masked_values(), 4.0 * T.masked_values(),
+                               rtol=1e-6)
+    S3 = ctf.TTTP(T, [jnp.ones(12), jnp.ones(10), jnp.ones(8)])
+    np.testing.assert_allclose(S3.masked_values(), T.masked_values(),
+                               rtol=1e-6)
+    with pytest.raises(ValueError):
+        ctf.TTTP(T, [None, None, None])
