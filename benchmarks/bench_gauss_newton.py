@@ -1,0 +1,67 @@
+"""Generalized Gauss-Newton completion: per-iteration cost and convergence
+vs ALS on the function tensor, plus the planner paths of the weighted Gram
+matvec (fused cg_matvec_bucketed vs TTTP+MTTKRP vs H-sliced). Entries land
+in the ``completion`` JSON group (BENCH_completion.json) next to als/ccd."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro import planner
+from repro.core import losses as L
+from repro.core.completion import ggn_init, ggn_sweep
+from repro.core.tttp import multilinear_values
+from repro.data import synthetic
+
+
+def _rmse(st, fs):
+    model = multilinear_values(st, fs)
+    d = (st.values - model) * st.mask
+    return float(jnp.sqrt(jnp.sum(d ** 2) / jnp.sum(st.mask)))
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(11)
+    nnz = 10_000 if quick else 60_000
+    shape = (60, 55, 50) if quick else (120, 110, 100)
+    rank = 6 if quick else 10
+    iters = 2 if quick else 5
+    lam = 1e-5
+    st = synthetic.function_tensor(key, shape, nnz)
+    ks = jax.random.split(key, st.ndim)
+    init = [jax.random.normal(k, (d, rank)) / rank ** 0.5
+            for k, d in zip(ks, shape)]
+
+    # GGN iteration cost + convergence (quadratic)
+    step = jax.jit(lambda s, stt: ggn_sweep(s, stt, L.quadratic, lam,
+                                            cg_iters=rank + 10))
+    state = ggn_init(init)
+    us = time_fn(lambda: step(st, state), warmup=1, iters=3)
+    for _ in range(iters):
+        state = step(st, state)
+    emit("ggn_function_quadratic_iter", us,
+         f"rmse={_rmse(st, list(state.factors)):.5f}")
+
+    # generalized loss (second-order GCP counterpart)
+    stp = st.with_values(jnp.round(jnp.abs(st.values) * 4))
+    stepp = jax.jit(lambda s, stt: ggn_sweep(s, stt, L.poisson_log, lam,
+                                             cg_iters=rank + 10,
+                                             joint_iters=8,
+                                             precond_iters=4))
+    statep = ggn_init([0.3 * f for f in init], damping=1e-3)
+    us = time_fn(lambda: stepp(stp, statep), warmup=1, iters=3)
+    emit("ggn_function_poisson_log_iter", us)
+
+    # weighted Gram matvec: planner path shoot-out (eager — the fused path
+    # includes its per-call host bucketize, as the cost model charges it)
+    w_st = st.with_values(jnp.full((st.cap,), 2.0) * st.mask)
+    x = init[0]
+    for path in ("tttp_mttkrp", "fused", "sliced"):
+        fn = lambda: planner.planned_cg_matvec(w_st, init, 0, x, path=path)
+        us = time_fn(fn, warmup=1, iters=3)
+        emit(f"ggn_gram_matvec_{path}", us)
+
+
+if __name__ == "__main__":
+    run()

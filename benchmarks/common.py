@@ -1,10 +1,14 @@
-"""Benchmark helpers: timing and CSV emission."""
+"""Benchmark helpers: timing, CSV emission, and machine-readable records."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict
 
 import jax
+
+# name -> us_per_call for every emit() since the last drain_records();
+# benchmarks.run drains this per module to build the BENCH_*.json files
+_RECORDS: Dict[str, float] = {}
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -23,4 +27,12 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def emit(name: str, us: float, derived: str = "") -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line, flush=True)
+    _RECORDS[name] = us
     return line
+
+
+def drain_records() -> Dict[str, float]:
+    """Return and clear the {name: us_per_call} records emitted so far."""
+    out = dict(_RECORDS)
+    _RECORDS.clear()
+    return out

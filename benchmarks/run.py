@@ -1,28 +1,40 @@
 """Benchmark harness — one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6]``
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6] [--json DIR]``
 prints ``name,us_per_call,derived`` CSV lines (paper mapping in DESIGN.md §7).
+
+``--json DIR`` additionally writes one ``BENCH_<group>.json`` file per
+module group into DIR, each a flat ``{name: us_per_call}`` object — the
+machine-readable perf trajectory. The completion solvers (als/ccd/sgd from
+``bench_completion``, ggn from ``bench_gauss_newton``) share the
+``completion`` group and land together in ``BENCH_completion.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
-from benchmarks import (bench_ccd_variants, bench_completion, bench_gcp,
-                        bench_mttkrp, bench_planner, bench_redistribution,
-                        bench_ttm, bench_tttp)
+from benchmarks import (bench_ccd_variants, bench_completion,
+                        bench_gauss_newton, bench_gcp, bench_mttkrp,
+                        bench_planner, bench_redistribution, bench_ttm,
+                        bench_tttp)
+from benchmarks.common import drain_records
 
+# (csv prefix, module, json group)
 MODULES = [
-    ("fig4_redistribution", bench_redistribution),
-    ("fig5a_ttm", bench_ttm),
-    ("fig5b_mttkrp", bench_mttkrp),
-    ("fig6_tttp", bench_tttp),
-    ("fig7_completion", bench_completion),
-    ("sec5.5_ccd_variants", bench_ccd_variants),
-    ("gcp_generalized_losses", bench_gcp),
-    ("planner_dispatch", bench_planner),
+    ("fig4_redistribution", bench_redistribution, "redistribution"),
+    ("fig5a_ttm", bench_ttm, "ttm"),
+    ("fig5b_mttkrp", bench_mttkrp, "mttkrp"),
+    ("fig6_tttp", bench_tttp, "tttp"),
+    ("fig7_completion", bench_completion, "completion"),
+    ("sec5.5_ccd_variants", bench_ccd_variants, "ccd_variants"),
+    ("gcp_generalized_losses", bench_gcp, "gcp"),
+    ("planner_dispatch", bench_planner, "planner"),
+    ("ggn_gauss_newton", bench_gauss_newton, "completion"),
 ]
 
 
@@ -30,10 +42,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="write BENCH_<group>.json files with "
+                         "{name: us_per_call} into DIR")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in MODULES:
+    groups: dict = {}
+    for name, mod, group in MODULES:
         if args.only and args.only not in name:
             continue
         t0 = time.time()
@@ -43,7 +59,30 @@ def main() -> None:
         except Exception:
             failures += 1
             traceback.print_exc()
+        # a module that fails midway keeps whatever it managed to emit
+        groups.setdefault(group, {}).update(drain_records())
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
+        for group, records in groups.items():
+            if not records:
+                continue
+            path = os.path.join(args.json, f"BENCH_{group}.json")
+            # merge with existing entries so a filtered run (--only) updates
+            # its slice of a shared group (e.g. completion = als/ccd/sgd
+            # from fig7 + ggn) without clobbering the rest
+            merged = {}
+            if os.path.exists(path):
+                try:
+                    with open(path) as f:
+                        merged = json.load(f)
+                except (OSError, ValueError):
+                    merged = {}
+            merged.update(records)
+            with open(path, "w") as f:
+                json.dump(merged, f, indent=2, sort_keys=True)
+            print(f"# wrote {path} ({len(records)} new/{len(merged)} total "
+                  f"entries)", flush=True)
     if failures:
         sys.exit(1)
 

@@ -29,13 +29,30 @@ from repro.core.sparse_tensor import SparseTensor
 def gram_matvec(omega: SparseTensor, factors: Sequence[jax.Array], mode: int,
                 x: jax.Array, lam: float, ctx: AxisCtx = LOCAL,
                 h_slices: int = 1,
-                mttkrp_path: Optional[str] = None) -> jax.Array:
-    """(G + λI) x via implicit TTTP+MTTKRP (paper eq. 3).
+                mttkrp_path: Optional[str] = None,
+                matvec_path: Optional[str] = None) -> jax.Array:
+    """(G_ω + λI) x via implicit TTTP+MTTKRP (paper eq. 3).
+
+    ``omega.values`` are the per-entry weights ω_n — the Ω indicator for
+    plain ALS, the loss curvature ℓ'' for the generalized Gauss-Newton
+    solver (``completion.gauss_newton``).
 
     ``h_slices > 1`` applies the paper's H-slicing schedule to BOTH halves:
     the (m, R) Khatri-Rao intermediates are never materialized wider than
     R/H columns, bounding transient memory at Θ(m·R/H) (paper §3.2).
-    ``mttkrp_path`` opts the MTTKRP half into planner dispatch (DESIGN.md §5)."""
+    ``mttkrp_path`` opts the MTTKRP half into planner dispatch (DESIGN.md §5).
+    ``matvec_path`` routes the WHOLE weighted matvec through the planner's
+    ``cg_matvec`` family instead — ``"fused"`` (single-pass
+    ``kernels.ops.cg_matvec_bucketed``), ``"tttp_mttkrp"``, ``"sliced"``,
+    ``"dense"``, or ``"auto"`` (§5.3 cost model decides). Only applies when
+    factors are replicated (no model axis): under column sharding the
+    TTTP half needs a psum(model) between the halves."""
+    if matvec_path is not None and ctx.model is None:
+        from repro.planner import planned_cg_matvec
+        path = None if matvec_path == "auto" else matvec_path
+        y = ctx.psum_data(planned_cg_matvec(omega, list(factors), mode, x,
+                                            path=path))
+        return y + lam * x
     fs = list(factors)
     fs[mode] = x
     if h_slices <= 1:
@@ -62,37 +79,54 @@ def gram_matvec(omega: SparseTensor, factors: Sequence[jax.Array], mode: int,
     return y + lam * x
 
 
-def batched_cg(matvec, b: jax.Array, x0: jax.Array, tol: float = 1e-4,
-               max_iters: int = 32, ctx: AxisCtx = LOCAL):
-    """Batched-rows CG on SPD systems; rows converge independently.
+def batched_pcg(matvec, b: jax.Array, x0: jax.Array, precond=None,
+                tol: float = 1e-4, max_iters: int = 32,
+                ctx: AxisCtx = LOCAL):
+    """Preconditioned batched-rows CG on SPD systems; rows converge
+    independently (converged rows are frozen by masking).
 
-    Stops (whole batch) when every row residual² ≤ tol²·‖b_row‖², or at
-    max_iters (≤ R guarantees exact solve modulo roundoff, §2.2)."""
+    ``precond`` is M⁻¹ applied elementwise over the (rows, R) batch —
+    block-Jacobi when M is each row's block diagonal; ``None`` is the
+    identity (plain CG). Stops (whole batch) when every row residual²
+    ≤ tol²·‖b_row‖², or at max_iters (≤ R guarantees exact solve modulo
+    roundoff, §2.2)."""
+    if precond is None:
+        precond = lambda v: v
     bnorm2 = rowdot_ctx(b, b, ctx)
     thresh = (tol ** 2) * jnp.maximum(bnorm2, 1e-30)
 
     r0 = b - matvec(x0)
+    z0 = precond(r0)
 
     def cond(state):
-        i, x, r, p, rs = state
+        i, x, r, p, rz, rs = state
         return (i < max_iters) & jnp.any(rs > thresh)
 
     def body(state):
-        i, x, r, p, rs = state
+        i, x, r, p, rz, rs = state
         ap = matvec(p)
         pap = rowdot_ctx(p, ap, ctx)
         active = rs > thresh
-        alpha = jnp.where(active, rs / jnp.where(pap > 0, pap, 1.0), 0.0)
+        alpha = jnp.where(active, rz / jnp.where(pap > 0, pap, 1.0), 0.0)
         x = x + alpha[:, None] * p
         r = r - alpha[:, None] * ap
-        rs_new = rowdot_ctx(r, r, ctx)
-        beta = jnp.where(active, rs_new / jnp.where(rs > 0, rs, 1.0), 0.0)
-        p = r + beta[:, None] * p
-        return i + 1, x, r, p, rs_new
+        z = precond(r)
+        rz_new = rowdot_ctx(r, z, ctx)
+        beta = jnp.where(active, rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
+        p = z + beta[:, None] * p
+        return i + 1, x, r, p, rz_new, rowdot_ctx(r, r, ctx)
 
-    init = (jnp.int32(0), x0, r0, r0, rowdot_ctx(r0, r0, ctx))
-    iters, x, r, p, rs = jax.lax.while_loop(cond, body, init)
+    init = (jnp.int32(0), x0, r0, z0, rowdot_ctx(r0, z0, ctx),
+            rowdot_ctx(r0, r0, ctx))
+    iters, x, r, p, rz, rs = jax.lax.while_loop(cond, body, init)
     return x, iters
+
+
+def batched_cg(matvec, b: jax.Array, x0: jax.Array, tol: float = 1e-4,
+               max_iters: int = 32, ctx: AxisCtx = LOCAL):
+    """Unpreconditioned :func:`batched_pcg` (z = r makes rz ≡ rs)."""
+    return batched_pcg(matvec, b, x0, precond=None, tol=tol,
+                       max_iters=max_iters, ctx=ctx)
 
 
 def als_update_mode(st: SparseTensor, omega: SparseTensor,

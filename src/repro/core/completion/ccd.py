@@ -63,9 +63,13 @@ def _ccd_column_update_einsum(rho, st, cols, mode, lam, ctx):
 
 def _ccd_column_update_tttp(rho, st, cols, mode, lam, ctx, path=None):
     """Same update routed through TTTP + sparse mode-reduction (Listing 6).
-    ``path`` opts the TTTP contractions into planner dispatch."""
+    ``path`` opts the TTTP contractions into planner dispatch.
+
+    Two TTTP kernel calls per column update: vw = TTTP(Ω, [None,v,w]) is
+    computed once and reused for both the numerator reduction
+    (a = Σ_i ρ·vw, since TTTP(ρ,·).values ≡ ρ·vw on the shared Ω pattern)
+    and the residual update."""
     other = [d for d in range(st.ndim) if d != mode]
-    rho_st = st.with_values(rho)
     fac = [None] * st.ndim
     fac2 = [None] * st.ndim
     for d in other:
@@ -73,13 +77,14 @@ def _ccd_column_update_tttp(rho, st, cols, mode, lam, ctx, path=None):
         fac2[d] = jnp.square(cols[d])
     from repro.planner import tttp_fn
     tttp_k = tttp_fn(path)
-    a_sp = tttp_k(rho_st, fac)                        # A = TTTP(ρ,[None,v,w])
-    a = ctx.psum_data(a_sp.reduce_mode(mode))          # a = einsum('ijk->i', A)
     omega = st.with_values(jnp.ones_like(rho) * st.mask)
+    vw_sp = tttp_k(omega, fac)                        # vw = TTTP(Ω,[None,v,w])
+    vw = vw_sp.values
+    a_sp = vw_sp.with_values(rho * vw)                # ≡ TTTP(ρ,[None,v,w])
+    a = ctx.psum_data(a_sp.reduce_mode(mode))          # a = einsum('ijk->i', A)
     b_sp = tttp_k(omega, fac2)                        # B = TTTP(Ω,[None,v²,w²])
     den0 = ctx.psum_data(b_sp.reduce_mode(mode))
     new_col = (a + cols[mode] * den0) / (lam + den0)
-    vw = tttp_k(omega, fac).values
     rows = st.indices[:, mode]
     delta = (cols[mode] - new_col)[rows] * vw
     return new_col, (rho + delta) * st.mask

@@ -1,0 +1,295 @@
+"""Generalized Gauss-Newton (damped Levenberg–Marquardt) tensor completion —
+the paper's quasi-Newton method, matrix-free on the eq.-3 Gram matvec.
+
+Minimizes  Σ_{n∈Ω} ℓ(t_n, m_n) + λ Σ_d ‖A_d‖²_F  for any elementwise loss
+with first and second derivatives (``repro.core.losses``). The model values
+m_n = Σ_r Π_d A_d[i_d, r] are multilinear, so with J = [J_1 … J_N] the
+per-mode Jacobians (J_d's rows are the Khatri-Rao rows Π_{e≠d} A_e[i_e, :])
+the generalized Gauss-Newton Hessian is
+
+    H = Jᵀ diag(ω) J + (2λ + μ) I,    ω_n = max(ℓ''(t_n, m_n), 0)
+
+with μ the Levenberg–Marquardt damping. Its diagonal blocks H_dd are
+EXACTLY the paper's eq.-3 implicit Gram matvec with curvature weights ω at
+the observed entries; the off-diagonal blocks share the same TTTP/MTTKRP
+structure. One GGN iteration is:
+
+1. **Joint LM step** — solve H Δ = −∇ with flexible CG whose matvec is
+   jx_n = Σ_e ⟨KR-row, X_e⟩ (N fused TTTP-halves summed once) followed by N
+   MTTKRPs, and whose **block-Jacobi preconditioner applies the per-mode
+   blocks H_dd⁻¹, each by a fixed number of batched-CG iterations on the
+   weighted Gram matvec** (``als.gram_matvec``); a static line search picks
+   the step length (Gauss-Newton directions overshoot on multilinear
+   problems far from the optimum).
+2. **Per-mode damped pass** — Gauss-Seidel over modes, each solving
+   (H_dd + (2λ+μ)I) Δ_d = −∇_d with block-Jacobi(diagonal)-preconditioned
+   batched CG. For quadratic loss (ω ≡ 2, μ → 0) this pass coincides with
+   the ALS implicit-CG sweep.
+3. **Accept/reject** — an iteration that does not decrease the objective is
+   rolled back and μ increased; accepted full steps decrease μ.
+
+Every weighted Gram matvec goes through :func:`als.gram_matvec`, whose
+``matvec_path`` routes it through the planner's ``cg_matvec`` family
+(DESIGN.md §8): the fused single-pass ``kernels.ops.cg_matvec_bucketed``,
+the TTTP+MTTKRP composition, or the H-sliced variant — §5.3 cost model
+deciding. Everything is ctx-parameterized (AxisCtx psums): the identical
+code runs single-device or under shard_map; jit-safe throughout (static
+line-search grid, jnp.where acceptance, fori_loop solvers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.completion.als import batched_pcg, gram_matvec
+from repro.core.completion.gcp import gcp_loss
+from repro.core.distributed import AxisCtx, LOCAL, mttkrp_ctx, rowdot_ctx
+from repro.core.losses import Loss
+from repro.core.sparse_tensor import SparseTensor
+
+# Levenberg–Marquardt damping schedule: decrease on a full accepted step,
+# increase on rejection / a heavily truncated line search.
+DAMPING_MIN = 1e-9
+DAMPING_MAX = 1e6
+DAMPING_DECREASE = 0.5
+DAMPING_INCREASE = 10.0
+DAMPING_TRUNCATED = 3.0
+
+# static line-search grid for the joint step (0 ⇒ reject the step)
+LINE_SEARCH_ALPHAS = (2.0, 1.5, 1.25, 1.0, 0.8, 0.65, 0.5, 0.4, 0.3,
+                      0.2, 0.1)
+
+
+class GGNState(NamedTuple):
+    """Solver state threaded through sweeps (and RestartableLoop)."""
+    factors: Tuple[jax.Array, ...]
+    damping: jax.Array   # () — current LM μ
+
+
+def ggn_init(factors: Sequence[jax.Array], damping: float = 1e-5) -> GGNState:
+    return GGNState(tuple(factors), jnp.asarray(damping, factors[0].dtype))
+
+
+# ---------------------------------------------------------------------------
+# solvers (batched_pcg — the masked-convergence PCG — lives in als.py next
+# to the unpreconditioned wrapper it generalizes)
+# ---------------------------------------------------------------------------
+
+def _block_cg_fixed(matvec: Callable, b: jax.Array, iters: int,
+                    ctx: AxisCtx) -> jax.Array:
+    """Fixed-iteration batched CG from zero — the block-Jacobi APPLY for the
+    joint solve (a fixed operator, as a preconditioner must be; the outer
+    loop uses flexible CG to absorb the residual nonlinearity)."""
+    def body(_, state):
+        x, r, p, rs = state
+        ap = matvec(p)
+        pap = rowdot_ctx(p, ap, ctx)
+        alpha = rs / jnp.where(pap > 0, pap, 1.0)
+        x = x + alpha[:, None] * p
+        r = r - alpha[:, None] * ap
+        rs_new = rowdot_ctx(r, r, ctx)
+        beta = rs_new / jnp.where(rs > 0, rs, 1.0)
+        p = r + beta[:, None] * p
+        return x, r, p, rs_new
+
+    init = (jnp.zeros_like(b), b, b, rowdot_ctx(b, b, ctx))
+    x, _, _, _ = jax.lax.fori_loop(0, iters, body, init)
+    return x
+
+
+def _tree_dot(a, b, ctx: AxisCtx):
+    return ctx.psum_model(sum(jnp.sum(x * y) for x, y in zip(a, b)))
+
+
+def _flexible_pcg(matvec: Callable, b, precond: Callable, iters: int,
+                  ctx: AxisCtx):
+    """Flexible (Polak–Ribière) PCG over a tuple-of-factors unknown; the
+    preconditioner may itself be an inexact iterative solve."""
+    x0 = tuple(jnp.zeros_like(v) for v in b)
+    z0 = precond(b)
+
+    def body(_, state):
+        x, r, z, p, rz = state
+        ap = matvec(p)
+        alpha = rz / jnp.maximum(_tree_dot(p, ap, ctx), 1e-30)
+        x = tuple(xx + alpha * pp for xx, pp in zip(x, p))
+        r_new = tuple(rr - alpha * aa for rr, aa in zip(r, ap))
+        z_new = precond(r_new)
+        rz_new = _tree_dot(r_new, z_new, ctx)
+        # flexible beta: (rz_new − ⟨r_old, z_new⟩) / rz_old
+        beta = (rz_new - _tree_dot(r, z_new, ctx)) / jnp.maximum(rz, 1e-30)
+        p = tuple(zz + beta * pp for zz, pp in zip(z_new, p))
+        return x, r_new, z_new, p, rz_new
+
+    init = (x0, tuple(b), z0, tuple(z0), _tree_dot(b, z0, ctx))
+    x, _, _, _, _ = jax.lax.fori_loop(0, iters, body, init)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# GGN pieces
+# ---------------------------------------------------------------------------
+
+def curvature_tensor(st: SparseTensor, factors: Sequence[jax.Array],
+                     loss: Loss, ctx: AxisCtx = LOCAL
+                     ) -> Tuple[SparseTensor, jax.Array]:
+    """(ω-valued tensor, model values): ω_n = max(ℓ''(t_n, m_n), 0) on Ω.
+
+    The clip keeps the GGN system PSD for losses whose clamped second
+    derivative vanishes (poisson below the floor, huber outside δ)."""
+    from repro.core.tttp import multilinear_values
+    model = ctx.psum_model(multilinear_values(st, list(factors)))
+    w = jnp.where(st.mask, loss.hess(st.values, model), 0.0)
+    return st.with_values(jnp.maximum(w, 0.0)), model
+
+
+def _gradients(st: SparseTensor, factors: List[jax.Array], model: jax.Array,
+               loss: Loss, lam: float, ctx: AxisCtx,
+               mttkrp_path: Optional[str]) -> List[jax.Array]:
+    g_st = st.with_values(jnp.where(st.mask,
+                                    loss.grad(st.values, model), 0.0))
+    grads = []
+    for d in range(st.ndim):
+        fs = list(factors)
+        fs[d] = None
+        grads.append(mttkrp_ctx(g_st, fs, d, ctx, path=mttkrp_path)
+                     + 2.0 * lam * factors[d])
+    return grads
+
+
+def joint_ggn_matvec(st: SparseTensor, w_st: SparseTensor,
+                     factors: List[jax.Array], xs: Sequence[jax.Array],
+                     shift, ctx: AxisCtx = LOCAL,
+                     mttkrp_path: Optional[str] = None
+                     ) -> Tuple[jax.Array, ...]:
+    """(H X)_d for the JOINT system: jx_n = Σ_e ⟨KR-row, X_e⟩ computed in
+    one fused accumulation (N TTTP halves share the pattern), then one
+    MTTKRP per mode — Θ(N·mR) total, same asymptotics as N diagonal-block
+    matvecs but covering all N² blocks."""
+    from repro.core.tttp import multilinear_values
+    jx = jnp.zeros((st.cap,), st.values.dtype)
+    for e in range(st.ndim):
+        fs = list(factors)
+        fs[e] = xs[e]
+        jx = jx + multilinear_values(st, fs)
+    z = w_st.with_values(w_st.values * ctx.psum_model(jx))
+    out = []
+    for d in range(st.ndim):
+        fs = [None if e == d else factors[e] for e in range(st.ndim)]
+        out.append(mttkrp_ctx(z, fs, d, ctx, path=mttkrp_path)
+                   + shift * xs[d])
+    return tuple(out)
+
+
+def ggn_update_mode(st: SparseTensor, factors: List[jax.Array], mode: int,
+                    loss: Loss, lam: float, damping,
+                    cg_tol: float = 1e-4, cg_iters: int = 32,
+                    ctx: AxisCtx = LOCAL, h_slices: int = 1,
+                    matvec_path: Optional[str] = None,
+                    mttkrp_path: Optional[str] = None) -> jax.Array:
+    """One damped per-mode GGN update: solve (H_dd + (2λ+μ)I) Δ = −∇_d with
+    diagonal-preconditioned batched CG, return A_d + Δ."""
+    w_st, model = curvature_tensor(st, factors, loss, ctx)
+    g_st = st.with_values(jnp.where(st.mask,
+                                    loss.grad(st.values, model), 0.0))
+    fs_g = list(factors)
+    fs_g[mode] = None
+    g = mttkrp_ctx(g_st, fs_g, mode, ctx, path=mttkrp_path) \
+        + 2.0 * lam * factors[mode]
+    shift = 2.0 * lam + damping
+    mv = functools.partial(gram_matvec, w_st, list(factors), mode,
+                           lam=shift, ctx=ctx, h_slices=h_slices,
+                           mttkrp_path=mttkrp_path, matvec_path=matvec_path)
+    # diagonal of each row's R×R Gram block, one MTTKRP with squared factors:
+    # diag_i[r] = Σ_{n∈Ω_i} ω_n Π_{e≠d} A_e[i_e, r]²
+    sq = [None if d == mode else jnp.square(f)
+          for d, f in enumerate(factors)]
+    diag = mttkrp_ctx(w_st, sq, mode, ctx, path=mttkrp_path) + shift
+    delta, _ = batched_pcg(mv, -g, jnp.zeros_like(g),
+                           precond=lambda v: v / diag,
+                           tol=cg_tol, max_iters=cg_iters, ctx=ctx)
+    return factors[mode] + delta
+
+
+def joint_ggn_step(st: SparseTensor, factors: List[jax.Array], loss: Loss,
+                   lam: float, damping, joint_iters: int = 15,
+                   precond_iters: int = 8, ctx: AxisCtx = LOCAL,
+                   h_slices: int = 1, matvec_path: Optional[str] = None,
+                   mttkrp_path: Optional[str] = None
+                   ) -> Tuple[List[jax.Array], jax.Array]:
+    """One joint LM step with line search. Returns (new factors, step α);
+    α = 0 means the step was rejected (no objective decrease)."""
+    w_st, model = curvature_tensor(st, factors, loss, ctx)
+    g = _gradients(st, factors, model, loss, lam, ctx, mttkrp_path)
+    shift = 2.0 * lam + damping
+    mv = functools.partial(joint_ggn_matvec, st, w_st, list(factors),
+                           shift=shift, ctx=ctx, mttkrp_path=mttkrp_path)
+
+    def precond(rs):
+        # block-Jacobi: apply each H_dd⁻¹ by a fixed number of batched-CG
+        # iterations on the eq.-3 weighted Gram matvec
+        out = []
+        for d in range(st.ndim):
+            mvd = functools.partial(gram_matvec, w_st, list(factors), d,
+                                    lam=shift, ctx=ctx, h_slices=h_slices,
+                                    mttkrp_path=mttkrp_path,
+                                    matvec_path=matvec_path)
+            out.append(_block_cg_fixed(mvd, rs[d], precond_iters, ctx))
+        return tuple(out)
+
+    delta = _flexible_pcg(mv, tuple(-gg for gg in g), precond,
+                          joint_iters, ctx)
+    f0 = gcp_loss(st, list(factors), loss, lam, ctx)
+    objs = jnp.stack([gcp_loss(st, [f + a * d_ for f, d_ in
+                                    zip(factors, delta)], loss, lam, ctx)
+                      for a in LINE_SEARCH_ALPHAS])
+    best = jnp.argmin(objs)
+    alphas = jnp.asarray(LINE_SEARCH_ALPHAS, f0.dtype)
+    alpha = jnp.where(objs[best] < f0, alphas[best], 0.0)
+    new = [f + alpha * d_ for f, d_ in zip(factors, delta)]
+    return new, alpha
+
+
+def ggn_sweep(st: SparseTensor, state: GGNState, loss: Loss, lam: float,
+              cg_tol: float = 1e-4, cg_iters: int = 32,
+              joint_iters: int = 15, precond_iters: int = 8,
+              use_joint: bool = True, ctx: AxisCtx = LOCAL,
+              h_slices: int = 1, matvec_path: Optional[str] = None,
+              mttkrp_path: Optional[str] = None,
+              adapt_damping: bool = True) -> GGNState:
+    """One GGN iteration: joint LM step (optional), then a per-mode damped
+    pass (Gauss-Seidel), then LM accept/reject of the whole iteration.
+    jit-safe (static line-search grid, jnp.where acceptance)."""
+    fs = list(state.factors)
+    mu = state.damping
+    if use_joint:
+        fs, alpha = joint_ggn_step(st, fs, loss, lam, mu,
+                                   joint_iters=joint_iters,
+                                   precond_iters=precond_iters, ctx=ctx,
+                                   h_slices=h_slices,
+                                   matvec_path=matvec_path,
+                                   mttkrp_path=mttkrp_path)
+    else:
+        alpha = jnp.asarray(1.0, fs[0].dtype)
+    for d in range(st.ndim):
+        fs[d] = ggn_update_mode(st, fs, d, loss, lam, mu,
+                                cg_tol, cg_iters, ctx, h_slices,
+                                matvec_path=matvec_path,
+                                mttkrp_path=mttkrp_path)
+    if not adapt_damping:
+        return GGNState(tuple(fs), mu)
+    f_old = gcp_loss(st, list(state.factors), loss, lam, ctx)
+    f_new = gcp_loss(st, fs, loss, lam, ctx)
+    ok = f_new <= f_old
+    factors = tuple(jnp.where(ok, new, old)
+                    for new, old in zip(fs, state.factors))
+    # μ schedule: shrink on a full step, grow when the line search had to
+    # truncate hard (the GN direction overshot), grow harder on rejection
+    mu_acc = jnp.where(alpha >= 1.0, mu * DAMPING_DECREASE,
+                       jnp.where(alpha >= 0.4, mu, mu * DAMPING_TRUNCATED))
+    mu = jnp.clip(jnp.where(ok, mu_acc, mu * DAMPING_INCREASE),
+                  DAMPING_MIN, DAMPING_MAX)
+    return GGNState(factors, mu)

@@ -27,13 +27,21 @@ from repro.sparse import ops as sops
 def sample_entries(key, st: SparseTensor, sample_size: int) -> SparseTensor:
     """Uniform with-replacement sample of the *valid* entries (Listing 7's
     getomega-style sampling, static output shape). Exact uniformity over
-    valid entries via probability-weighted choice."""
+    valid entries via probability-weighted choice.
+
+    A shard with ZERO valid entries (possible under sharded SGD when a
+    shard is all padding) would yield an all-zero probability vector —
+    invalid for ``jax.random.choice`` (garbage indices / NaNs). Fall back
+    to a uniform distribution over the capacity and mark every sampled
+    entry invalid; the caller's (valid-count / sample_size) scaling already
+    zeroes the shard's gradient contribution."""
     p = st.valid.astype(jnp.float32)
-    p = p / jnp.maximum(jnp.sum(p), 1.0)
+    total = jnp.sum(p)
+    p = jnp.where(total > 0, p / jnp.maximum(total, 1.0), 1.0 / st.cap)
     pick = jax.random.choice(key, st.cap, (sample_size,), replace=True, p=p)
+    valid = jnp.broadcast_to(total > 0, (sample_size,))
     return SparseTensor(st.indices[pick], st.values[pick],
-                        jnp.ones((sample_size,), bool), st.shape,
-                        nnz=sample_size)
+                        valid, st.shape, nnz=sample_size)
 
 
 def sgd_sweep(key, st: SparseTensor, factors: Sequence[jax.Array],

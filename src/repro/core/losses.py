@@ -4,10 +4,14 @@ Tensor completion minimizes  Σ_{n∈Ω} ℓ(t_n, m_n) + λ Σ_d ‖A_d‖²_F  
 m_n = Σ_r Π_d A_d[i_d(n), r] is the CP model value at a nonzero. For
 quadratic ℓ this is the classic problem (§2); generalized ℓ (GCP) needs only
 elementwise value/grad at the observed entries — the same TTTP/MTTKRP kernels
-apply with the loss gradient in place of the residual.
+apply with the loss gradient in place of the residual. The generalized
+Gauss-Newton solver (``completion.gauss_newton``) additionally needs the
+elementwise curvature ∂²ℓ/∂m², which weights the implicit Gram matvec
+(paper eq. 3) at the observed entries.
 
-Each loss provides value(t, m) and grad(t, m) = ∂ℓ/∂m; grads are hand-written
-and property-tested against jax.grad.
+Each loss provides value(t, m), grad(t, m) = ∂ℓ/∂m and hess(t, m) = ∂²ℓ/∂m²;
+grads/hessians are hand-written and property-tested against jax.grad
+(including the clamp regions of the clipped losses).
 """
 from __future__ import annotations
 
@@ -23,22 +27,29 @@ class Loss:
     name: str
     value: Callable  # (t, m) -> elementwise loss
     grad: Callable   # (t, m) -> dloss/dm
+    hess: Callable   # (t, m) -> d²loss/dm² (GGN curvature weight)
 
 
 quadratic = Loss(
     "quadratic",
     value=lambda t, m: jnp.square(t - m),
     grad=lambda t, m: 2.0 * (m - t),
+    hess=lambda t, m: jnp.full_like(m, 2.0),
 )
 
 # Poisson log-likelihood with identity link: ℓ = m - t·log(max(m,ε)).
 # The floor keeps value/grad finite when an unconstrained optimizer pushes
 # the model negative (the log link below is the unconstrained alternative).
+# Below the floor the log term is constant in m, so the true derivative of
+# the clamped value is 1 (and the curvature 0) — grad/hess must match the
+# clamp, not the unclamped formula.
 _EPS = 1e-6
 poisson = Loss(
     "poisson",
     value=lambda t, m: m - t * jnp.log(jnp.maximum(m, _EPS)),
-    grad=lambda t, m: 1.0 - t / jnp.maximum(m, _EPS),
+    grad=lambda t, m: jnp.where(m > _EPS, 1.0 - t / jnp.maximum(m, _EPS), 1.0),
+    hess=lambda t, m: jnp.where(m > _EPS,
+                                t / jnp.square(jnp.maximum(m, _EPS)), 0.0),
 )
 
 # Poisson with log link: ℓ = exp(m) - t·m  (model logs the rate; always valid)
@@ -46,6 +57,7 @@ poisson_log = Loss(
     "poisson_log",
     value=lambda t, m: jnp.exp(m) - t * m,
     grad=lambda t, m: jnp.exp(m) - t,
+    hess=lambda t, m: jnp.exp(m),
 )
 
 # Bernoulli logit: t ∈ {0,1}; ℓ = log(1+exp(m)) - t·m
@@ -53,6 +65,7 @@ logistic = Loss(
     "logistic",
     value=lambda t, m: jnp.logaddexp(0.0, m) - t * m,
     grad=lambda t, m: jax.nn.sigmoid(m) - t,
+    hess=lambda t, m: jax.nn.sigmoid(m) * jax.nn.sigmoid(-m),
 )
 
 
@@ -66,6 +79,10 @@ def _huber_grad(t, m, delta=1.0):
     return jnp.clip(d, -delta, delta)
 
 
-huber = Loss("huber", value=_huber_val, grad=_huber_grad)
+def _huber_hess(t, m, delta=1.0):
+    return jnp.where(jnp.abs(m - t) < delta, 1.0, 0.0)
+
+
+huber = Loss("huber", value=_huber_val, grad=_huber_grad, hess=_huber_hess)
 
 LOSSES = {l.name: l for l in (quadratic, poisson, poisson_log, logistic, huber)}

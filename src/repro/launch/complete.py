@@ -3,8 +3,12 @@
     python -m repro.launch.complete --dataset function --algorithm als \
         --rank 10 --sweeps 10 [--nnz 200000 --dims 200,180,160]
 
-Runs ALS (implicit-CG), CCD++ (einsum or TTTP variant), SGD, or
-generalized-loss GCP on a synthetic function tensor or Netflix-shaped
+Algorithms: ``als`` (implicit-CG, quadratic loss), ``ccd``/``ccd_tttp``
+(CCD++, einsum or TTTP-routed), ``sgd`` (sampled subgradient), ``gcp``
+(first-order generalized-loss GD/Adam), and ``ggn`` (damped generalized
+Gauss-Newton / Levenberg–Marquardt on the eq.-3 weighted Gram matvec —
+second-order, any ``--loss``; see ``completion.gauss_newton`` and
+DESIGN.md §8). Runs on a synthetic function tensor or Netflix-shaped
 tensor, with checkpoint/restart via the fault-tolerant runner. Distribution
 (when devices are available) follows DESIGN.md §4; on one CPU device the
 identical code runs with the LOCAL ctx — parallelism-oblivious, as the
@@ -19,7 +23,8 @@ import jax.numpy as jnp
 
 from repro.core import losses as LOSS
 from repro.core.completion import (als_sweep, ccd_sweep, ccd_sweep_tttp,
-                                   gcp_adam_init, gcp_step, sgd_sweep)
+                                   gcp_adam_init, gcp_step, ggn_init,
+                                   ggn_sweep, sgd_sweep)
 from repro.core.completion.ccd import residual_values
 from repro.core.distributed import LOCAL
 from repro.core.sparse_tensor import SparseTensor
@@ -40,7 +45,7 @@ def main():
     ap.add_argument("--dataset", default="function",
                     choices=["function", "netflix"])
     ap.add_argument("--algorithm", default="als",
-                    choices=["als", "ccd", "ccd_tttp", "sgd", "gcp"])
+                    choices=["als", "ccd", "ccd_tttp", "sgd", "gcp", "ggn"])
     ap.add_argument("--loss", default="quadratic",
                     choices=list(LOSS.LOSSES))
     ap.add_argument("--dims", default="200,180,160")
@@ -51,6 +56,18 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--sample-rate", type=float, default=0.1)
     ap.add_argument("--cg-iters", type=int, default=20)
+    ap.add_argument("--damping", type=float, default=1e-5,
+                    help="initial Levenberg-Marquardt damping (ggn)")
+    ap.add_argument("--matvec-path", default=None,
+                    choices=["auto", "fused", "tttp_mttkrp", "sliced",
+                             "dense"],
+                    help="planner path for the ggn weighted Gram matvec "
+                         "(DESIGN.md §8); default: direct kernel "
+                         "composition. NOTE: the sweep is jit'd, where "
+                         "'fused' falls back to the tttp_mttkrp "
+                         "composition (host bucketize needs concrete "
+                         "data); the fused kernel itself is exercised "
+                         "eagerly by benchmarks/bench_gauss_newton.py")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_completion_ckpt")
     args = ap.parse_args()
 
@@ -91,6 +108,15 @@ def main():
         state0 = tuple(factors)
         step = lambda i, fs: tuple(fn(jax.random.fold_in(key, i), st,
                                       list(fs)))
+    elif args.algorithm == "ggn":
+        if args.matvec_path == "fused":
+            print("note: under jit the 'fused' matvec path falls back to "
+                  "the tttp_mttkrp composition (see --help)")
+        fn = jax.jit(lambda s, stt: ggn_sweep(
+            s, stt, loss, args.lam, cg_iters=args.cg_iters,
+            matvec_path=args.matvec_path))
+        state0 = ggn_init(factors, damping=args.damping)
+        step = lambda i, stt: fn(st, stt)
     else:  # gcp
         ad0 = gcp_adam_init(factors)
         fn = jax.jit(lambda s, fs, ad: gcp_step(

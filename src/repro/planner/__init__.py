@@ -31,12 +31,14 @@ __all__ = [
     "build_ir", "candidate_paths", "estimate", "rank_paths",
     "plan_contraction", "clear_plan_cache", "plan_cache_size",
     "execute", "planned_einsum", "planned_mttkrp", "planned_tttp",
-    "mttkrp_fn", "tttp_fn",
+    "planned_cg_matvec", "mttkrp_fn", "tttp_fn",
 ]
 
-# mode letters for synthesized expressions; 'z' is reserved for the rank
+# mode letters for synthesized expressions; 'z' is reserved for the kept
+# rank, 'y' for the contracted rank of the Gram-matvec family
 _MODE_LETTERS = "abcdefghij"
 _RANK_LETTER = "z"
+_RANK2_LETTER = "y"
 
 
 def mttkrp_fn(path: Optional[str] = None):
@@ -88,6 +90,37 @@ def planned_mttkrp(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
     out = _MODE_LETTERS[mode] + _RANK_LETTER
     expr = _synth_expr(st.ndim, present, out)
     ops = (st, *[factors[d] for d in present])
+    return planned_einsum(expr, *ops, path=path, autotune=autotune)
+
+
+def planned_cg_matvec(weights: SparseTensor,
+                      factors: Sequence[jax.Array], mode: int,
+                      x: jax.Array, path: Optional[str] = None,
+                      autotune: bool = False) -> jax.Array:
+    """Weighted Gram matvec (paper §2.2 + eq. 3) via the planner:
+
+        y[i, r] = Σ_{n: i_mode(n)=i} ω_n (Π_{d≠mode} A_d[i_d, r]) ·
+                  Σ_s x[i, s] Π_{d≠mode} A_d[i_d, s]
+
+    ``weights.values`` holds ω_n (the Ω indicator for plain ALS, the loss
+    curvature ℓ''(t_n, m_n) for the generalized Gauss-Newton solver).
+    Candidate paths: ``fused`` (the single-pass ``kernels.ops
+    .cg_matvec_bucketed``), ``tttp_mttkrp`` (eq.-3 composition), ``sliced``
+    (H-sliced both halves), ``dense``. Regularization/damping is NOT
+    included — callers add ``lam * x`` themselves."""
+    nd = weights.ndim
+    others = [d for d in range(nd) if d != mode]
+    if any(factors[d] is None for d in others):
+        raise ValueError("the Gram matvec needs a factor on every "
+                         "non-target mode")
+    s_term = _MODE_LETTERS[:nd]
+    terms = ([s_term]
+             + [s_term[d] + _RANK_LETTER for d in others]
+             + [s_term[mode] + _RANK2_LETTER]
+             + [s_term[d] + _RANK2_LETTER for d in others])
+    expr = ",".join(terms) + "->" + s_term[mode] + _RANK_LETTER
+    ops = (weights, *[factors[d] for d in others], x,
+           *[factors[d] for d in others])
     return planned_einsum(expr, *ops, path=path, autotune=autotune)
 
 

@@ -33,8 +33,9 @@ MEM_RATE = 1.0e10    # words / s
 SORT_WORDS_PER_KEY = 8.0
 
 # Preference order used only to break exact score ties deterministically.
-_TIE_ORDER = ("all_at_once", "segment", "dense_output", "bucketed", "sliced",
-              "t_first", "hypersparse", "pairwise", "kr_first", "dense")
+_TIE_ORDER = ("all_at_once", "fused", "tttp_mttkrp", "segment", "dense_output",
+              "bucketed", "sliced", "t_first", "hypersparse", "pairwise",
+              "kr_first", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +79,8 @@ def candidate_paths(ir: pir.ContractionIR) -> List[str]:
         if pir.is_classic_mttkrp(ir):
             return ["all_at_once", "bucketed", "t_first", "kr_first", "dense"]
         return ["all_at_once", "dense"]
+    if ir.kind == pir.CG_MATVEC:
+        return ["tttp_mttkrp", "fused", "sliced", "dense"]
     raise ValueError(f"unknown IR kind {ir.kind!r}")
 
 
@@ -176,6 +179,36 @@ def estimate(ir: pir.ContractionIR, path: str) -> PathCost:
         if path == "dense":
             d = _dense_size(ir)
             return PathCost(path, d * r, d + base_in + out_words)
+
+    if ir.kind == pir.CG_MATVEC:
+        # nf = non-target factors per half; the contracted-rank half also
+        # reads x (counted in _factor_words via factor_modes)
+        nf = n - 1
+        out_words = float(shape[ir.keep_modes[0]]) * r
+        base_in = coo_words + _factor_words(ir)
+        if path == "tttp_mttkrp":
+            # TTTP then MTTKRP: the Khatri-Rao rows are gathered twice, and
+            # a Θ(m) z intermediate lands between the halves
+            return PathCost(path, m * r * (2 * nf + 1),
+                            base_in + 2 * m + out_words,
+                            note="TTTP + MTTKRP composition (eq. 3)")
+        if path == "fused":
+            # one pass per nonzero, KR gather shared across both halves; as
+            # with bucketed MTTKRP, eager dispatch pays a per-call host
+            # bucketize (production: ingest-time buckets + kernels.ops
+            # cg_matvec_bucketed directly)
+            return PathCost(path, m * r * (nf + 2),
+                            base_in + out_words + _sort_traffic(int(m), 1),
+                            note="fused single-pass kernel + per-call bucketize")
+        if path == "sliced":
+            h = _sliced_h(int(r))
+            return PathCost(path, m * r * (2 * nf + 1),
+                            base_in + (h - 1) * coo_words + m * r / h +
+                            2 * m + out_words,
+                            note=f"H={h} column slices on both halves")
+        if path == "dense":
+            d = _dense_size(ir)
+            return PathCost(path, 2 * d * r, d + base_in + out_words)
 
     raise ValueError(f"no cost formula for kind={ir.kind!r} path={path!r}")
 

@@ -168,6 +168,70 @@ def _exec_mttkrp(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
     return _reorder(res, canon, ir.out)
 
 
+def _cg_factor_groups(ir: pir.ContractionIR, dense_ops: Sequence):
+    """Split the CG_MATVEC dense operands into the kept-rank (MTTKRP half)
+    and contracted-rank (TTTP half) factor lists, indexed by sparse mode."""
+    nd = len(ir.sparse.shape)
+    s_term = ir.sparse_term
+    r_fac: List[Optional[jax.Array]] = [None] * nd
+    s_fac: List[Optional[jax.Array]] = [None] * nd
+    for pos, op in zip(ir.dense_positions, dense_ops):
+        t = ir.operands[pos].term
+        d = s_term.index(t[0])
+        if t[1] == ir.rank_index:
+            r_fac[d] = op
+        else:
+            s_fac[d] = op
+    return r_fac, s_fac
+
+
+def _exec_cg_matvec(ir: pir.ContractionIR, st: SparseTensor, dense_ops,
+                    path: str):
+    """Weighted Gram matvec (paper eq. 3): values of ``st`` are the
+    curvature weights ω_n; ``s_fac[mode]`` is the CG direction x."""
+    if path == "dense":
+        return _densified_einsum(ir, st, dense_ops)
+    mode = ir.keep_modes[0]
+    r_fac, s_fac = _cg_factor_groups(ir, dense_ops)
+    x = s_fac[mode]
+    canon = ir.sparse_term[mode] + ir.rank_index
+    # the fused kernel computes the Khatri-Rao gather ONCE and reuses it for
+    # both halves — only valid when both halves share the same factor
+    # objects (always true via planned_cg_matvec); otherwise, and under
+    # tracing (host bucketize), fall back to the composition
+    shared = all(s_fac[d] is r_fac[d] for d in range(len(r_fac)) if d != mode)
+    traced = (_is_tracer(st.indices) or _is_tracer(st.values) or
+              _is_tracer(x))
+    if path == "fused" and shared and not traced:
+        buckets = bucketize(st, mode, block_rows=8)
+        res = kops.cg_matvec_bucketed(buckets, r_fac, x,
+                                      num_rows=st.shape[mode])
+        return _reorder(res, canon, ir.out)
+    if path in ("fused", "tttp_mttkrp"):
+        z = st.with_values(st.values *
+                           core_tttp.multilinear_values(st, s_fac))
+        return _reorder(sops.mttkrp(z, r_fac, mode), canon, ir.out)
+    if path == "sliced":
+        r2 = ir.size_of(ir.rank2_index)
+        h2 = _sliced_h(r2)
+        rs2 = r2 // h2
+        acc = jnp.zeros((st.cap,), st.values.dtype)
+        for h in range(h2):
+            sl = [None if f is None else f[:, h * rs2:(h + 1) * rs2]
+                  for f in s_fac]
+            acc = acc + core_tttp.multilinear_values(st, sl)
+        z = st.with_values(st.values * acc)
+        r1 = ir.rank_size
+        h1 = _sliced_h(r1)
+        rs1 = r1 // h1
+        cols = [sops.mttkrp(
+            z, [None if f is None else f[:, h * rs1:(h + 1) * rs1]
+                for f in r_fac], mode) for h in range(h1)]
+        res = jnp.concatenate(cols, axis=1) if h1 > 1 else cols[0]
+        return _reorder(res, canon, ir.out)
+    raise ValueError(f"unknown CG_MATVEC path {path!r}")
+
+
 def execute(ir: pir.ContractionIR, path: str, operands: Sequence):
     """Run the contraction along ``path``. Operand list must match the IR."""
     if ir.kind == pir.DENSE:
@@ -181,4 +245,6 @@ def execute(ir: pir.ContractionIR, path: str, operands: Sequence):
         return _exec_ttm(ir, st, dense_ops, path)
     if ir.kind == pir.MTTKRP:
         return _exec_mttkrp(ir, st, dense_ops, path)
+    if ir.kind == pir.CG_MATVEC:
+        return _exec_cg_matvec(ir, st, dense_ops, path)
     raise ValueError(f"unknown IR kind {ir.kind!r}")

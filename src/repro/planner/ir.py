@@ -13,7 +13,14 @@ the paper's kernels cover (DESIGN.md §5.1):
   (``"ijk,kr->ijr"``, any output order, any tensor order);
 * ``MTTKRP`` — ≥2 rank-sharing factor matrices contracting a subset of the
   sparse modes; covers the classic single-output-mode MTTKRP and the partial
-  / multi-output-mode generalization (``"ijkl,kr,lr->ijr"``).
+  / multi-output-mode generalization (``"ijkl,kr,lr->ijr"``);
+* ``CG_MATVEC`` — the implicit-CG weighted Gram matvec (paper §2.2 + eq. 3):
+  TWO rank indices, one contracted (the TTTP half) and one kept (the MTTKRP
+  half), with factors covering every mode on the contracted-rank side and
+  every non-output mode on the kept-rank side
+  (``"ijk,jr,kr,iy,jy,ky->ir"``). This is the one multi-stage composition
+  the planner fuses: the kernel-level single-pass path reuses the Khatri-Rao
+  gather across both halves.
 
 The IR is built from *static* metadata only (terms, shapes, capacities, nnz
 hints, dtypes) so construction is safe at jax trace time.
@@ -30,8 +37,9 @@ REDUCE = "reduce"
 TTTP = "tttp"
 TTM = "ttm"
 MTTKRP = "mttkrp"
+CG_MATVEC = "cg_matvec"
 
-KINDS = (DENSE, REDUCE, TTTP, TTM, MTTKRP)
+KINDS = (DENSE, REDUCE, TTTP, TTM, MTTKRP, CG_MATVEC)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,9 +67,12 @@ class ContractionIR:
     keep_modes: Tuple[int, ...] = ()        # REDUCE/MTTKRP: kept sparse modes,
                                             #   ordered as they appear in out
     rank_index: Optional[str] = None        # TTTP/TTM/MTTKRP rank letter
+                                            #   (CG_MATVEC: the KEPT rank)
     factor_modes: Tuple[int, ...] = ()      # sparse mode matched by each
                                             #   dense factor, in operand order
     contract_mode: Optional[int] = None     # TTM: the contracted sparse mode
+    rank2_index: Optional[str] = None       # CG_MATVEC: the contracted rank
+                                            #   letter (the TTTP half)
 
     # -- helpers -----------------------------------------------------------
     def size_of(self, idx: str) -> int:
@@ -162,9 +173,13 @@ def build_ir(expr: str, operands: Sequence) -> ContractionIR:
     # ---- factor-matrix families: every dense term is (mode, rank) --------
     new_idx = {c for _, info in dense_infos for c in info.term
                if c not in s_term}
+    if len(new_idx) == 2:
+        return _classify_cg_matvec(expr, infos, out, size_items, spos,
+                                   s_term, dense_infos, new_idx)
     if len(new_idx) != 1:
         raise NotImplementedError(
-            f"expected exactly one rank index shared by the dense factors, "
+            f"expected exactly one rank index shared by the dense factors "
+            f"(or two for the Gram-matvec family), "
             f"got {sorted(new_idx)} in {expr!r}")
     (r_idx,) = new_idx
     factor_modes = []
@@ -211,6 +226,54 @@ def build_ir(expr: str, operands: Sequence) -> ContractionIR:
     return ContractionIR(expr, MTTKRP, infos, out, size_items,
                          sparse_pos=spos, keep_modes=keep,
                          rank_index=r_idx, factor_modes=factor_modes)
+
+
+def _classify_cg_matvec(expr, infos, out, size_items, spos, s_term,
+                        dense_infos, new_idx) -> ContractionIR:
+    """Classify the two-rank-index weighted Gram matvec (paper eq. 3):
+
+        y[i, r] = Σ_n ω_n · (Π_{d≠mode} A_d[i_d, r]) · Σ_s x[i_mode, s] ·
+                  Π_{d≠mode} A_d[i_d, s]
+
+    i.e. one rank index (``rank2_index``) fully contracted over factors
+    covering EVERY sparse mode (the TTTP half, with the target-mode factor
+    playing x), and one rank index kept in the output over factors covering
+    every non-target mode (the MTTKRP half)."""
+    kept = [c for c in new_idx if c in out]
+    if len(kept) != 1:
+        raise NotImplementedError(
+            f"two rank indices require exactly one kept in the output "
+            f"(the Gram-matvec family), got {sorted(kept)} kept in {expr!r}")
+    r_idx = kept[0]
+    (s_idx,) = new_idx - {r_idx}
+    out_modes = [c for c in out if c != r_idx]
+    if len(out_modes) != 1 or out_modes[0] not in s_term:
+        raise NotImplementedError(
+            f"Gram-matvec output must be one sparse mode plus the kept rank, "
+            f"got {out!r} in {expr!r}")
+    keep = s_term.index(out_modes[0])
+    factor_modes, r_modes, s_modes = [], [], []
+    for _, info in dense_infos:
+        t = info.term
+        if len(t) != 2 or t[1] not in (r_idx, s_idx) or t[0] not in s_term:
+            raise NotImplementedError(
+                f"dense operand term {t!r} is not a ({{sparse mode}}, rank) "
+                f"factor matrix in {expr!r}")
+        m = s_term.index(t[0])
+        factor_modes.append(m)
+        (r_modes if t[1] == r_idx else s_modes).append(m)
+    nd = len(s_term)
+    if (sorted(r_modes) != [d for d in range(nd) if d != keep]
+            or sorted(s_modes) != list(range(nd))):
+        raise NotImplementedError(
+            f"Gram matvec needs kept-rank factors on every non-output mode "
+            f"and contracted-rank factors on every mode; got kept-rank modes "
+            f"{sorted(r_modes)}, contracted-rank modes {sorted(s_modes)} "
+            f"in {expr!r}")
+    return ContractionIR(expr, CG_MATVEC, infos, out, size_items,
+                         sparse_pos=spos, keep_modes=(keep,),
+                         rank_index=r_idx, factor_modes=tuple(factor_modes),
+                         rank2_index=s_idx)
 
 
 def is_classic_mttkrp(ir: ContractionIR) -> bool:

@@ -5,7 +5,7 @@ At 1000+ nodes the failure model is: (a) node loss ⇒ job restart from the
 last checkpoint (possibly on fewer nodes — see ``runtime.elastic``);
 (b) stragglers ⇒ detect via step-time watchdog, mitigate by eviction+restart
 or, for the sparse workloads, by construction (equal-capacity shuffled
-shards make per-device work identical — DESIGN.md §3/§8).
+shards make per-device work identical — DESIGN.md §3).
 
 ``RestartableLoop`` drives a jit'd step function with periodic async
 checkpoints, resumes from the newest valid manifest (falling back to older

@@ -103,6 +103,65 @@ def test_gcp_generalized_losses_descend(loss_name):
     assert l1 < l0, (loss_name, l0, l1)
 
 
+def test_ccd_tttp_variant_uses_two_tttp_calls_per_column(monkeypatch):
+    """Perf regression guard: the TTTP-routed column update reuses
+    vw = TTTP(Ω, fac) for both the numerator and the residual update —
+    two TTTP kernel calls per column update, not three — and stays
+    numerically identical to the einsum variant."""
+    import repro.planner as planner_mod
+    from repro.core.completion.ccd import (_ccd_column_update_einsum,
+                                           _ccd_column_update_tttp,
+                                           residual_values)
+    from repro.core.distributed import LOCAL
+    st, fs = make_problem(jax.random.PRNGKey(7), nnz=600)
+    rho = residual_values(st, fs)
+    cols = [f[:, 0] for f in fs]
+    calls = []
+    orig = planner_mod.tttp_fn
+
+    def counting(path=None):
+        k = orig(path)
+        return lambda *a, **kw: calls.append(1) or k(*a, **kw)
+
+    monkeypatch.setattr(planner_mod, "tttp_fn", counting)
+    col_t, rho_t = _ccd_column_update_tttp(rho, st, cols, 0, 1e-6, LOCAL)
+    assert len(calls) == 2, f"expected 2 TTTP calls, got {len(calls)}"
+    col_e, rho_e = _ccd_column_update_einsum(rho, st, cols, 0, 1e-6, LOCAL)
+    np.testing.assert_allclose(col_t, col_e, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(rho_t, rho_e, rtol=1e-5, atol=1e-5)
+
+
+def test_sgd_sample_entries_empty_shard():
+    """Regression: a shard with zero valid entries must not feed an all-zero
+    probability vector to jax.random.choice (garbage indices / NaNs under
+    sharded SGD). The fallback samples uniformly, marks the sample invalid,
+    and the sweep stays finite."""
+    from repro.core.completion.sgd import sample_entries
+    shape = (10, 8, 6)
+    cap = 32
+    empty = SparseTensor(jnp.zeros((cap, 3), jnp.int32), jnp.zeros((cap,)),
+                         jnp.zeros((cap,), bool), shape)
+    s = sample_entries(jax.random.PRNGKey(0), empty, 16)
+    idx = np.asarray(s.indices)
+    assert np.all(np.isfinite(idx))
+    assert np.all(idx >= 0) and all(
+        np.all(idx[:, d] < shape[d]) for d in range(3))
+    assert not bool(jnp.any(s.valid))
+    # a full sgd sweep on the empty shard: finite, regularization-only drift
+    fs = [jax.random.normal(jax.random.PRNGKey(d), (n, 4))
+          for d, n in enumerate(shape)]
+    out = sgd_sweep(jax.random.PRNGKey(1), empty, list(fs), lam=1e-3,
+                    lr=1e-2, sample_size=16)
+    for f in out:
+        assert bool(jnp.all(jnp.isfinite(f)))
+    # under jit as well (the sharded code path always traces)
+    out_j = jax.jit(lambda k, s_, f: sgd_sweep(k, s_, list(f), 1e-3, 1e-2,
+                                               16))(jax.random.PRNGKey(1),
+                                                    empty, tuple(fs))
+    for f in out_j:
+        assert bool(jnp.all(jnp.isfinite(f)))
+
+
 def test_gcp_quadratic_grad_matches_autodiff():
     """MTTKRP-based GCP gradient == jax.grad of the objective."""
     from repro.core.completion.gcp import gcp_gradients

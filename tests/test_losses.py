@@ -1,0 +1,62 @@
+"""Loss derivative checks that run without hypothesis: hand-written
+grad/hess vs jax.grad for all five losses, clamp regions included.
+(The hypothesis-driven versions in test_properties.py fuzz the same
+invariants when hypothesis is available.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses as L
+
+
+def _sample(name, seed):
+    key = jax.random.PRNGKey(seed)
+    t = jnp.abs(jax.random.normal(key, (64,))) + 0.1
+    if name == "logistic":
+        t = (t > 0.5).astype(jnp.float32)
+    if name == "poisson":
+        t = jnp.round(t * 3)
+    m = 2.0 * jax.random.normal(jax.random.fold_in(key, 1), (64,))
+    # clamp-region probes, strictly off the boundaries: below/above the
+    # poisson floor ε and inside/outside the huber δ
+    m_probe = jnp.array([-2.0, -1e-3, 1e-8, 1e-7, L._EPS * 0.5,
+                         L._EPS * 3.0, 1e-4, 0.3, 2.5, 4.0])
+    t_probe = jnp.ones_like(m_probe) * (t[0] if name != "logistic" else 1.0)
+    return jnp.concatenate([t, t_probe]), jnp.concatenate([m, m_probe])
+
+
+@pytest.mark.parametrize("name", sorted(L.LOSSES))
+@pytest.mark.parametrize("seed", [0, 7, 123])
+def test_grad_matches_autodiff(name, seed):
+    loss = L.LOSSES[name]
+    t, m = _sample(name, seed)
+    got = loss.grad(t, m)
+    want = jax.vmap(jax.grad(lambda mm, tt: loss.value(tt, mm)))(m, t)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(L.LOSSES))
+@pytest.mark.parametrize("seed", [0, 7, 123])
+def test_hess_matches_autodiff(name, seed):
+    loss = L.LOSSES[name]
+    t, m = _sample(name, seed)
+    got = loss.hess(t, m)
+    want = jax.vmap(jax.grad(lambda mm, tt: loss.grad(tt, mm)))(m, t)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_poisson_grad_is_one_below_floor():
+    """Regression: the clamped poisson grad is exactly 1 where m ≤ ε (the
+    log(max(m, ε)) term is constant in m there), not 1 − t/ε; curvature 0."""
+    t = jnp.array([3.0, 1.0, 7.0])
+    m = jnp.array([-1.0, 0.0, L._EPS * 0.25])
+    np.testing.assert_allclose(L.poisson.grad(t, m), jnp.ones(3))
+    np.testing.assert_allclose(L.poisson.hess(t, m), jnp.zeros(3))
+
+
+def test_hess_nonnegative_on_domain():
+    """Every loss curvature is ≥ 0 (the GGN weights are PSD-safe)."""
+    for name, loss in L.LOSSES.items():
+        t, m = _sample(name, 3)
+        assert bool(jnp.all(loss.hess(t, m) >= 0)), name

@@ -44,6 +44,9 @@ PATTERNS = [
     ("ijk,ir,jr,kr->ijk", (13, 11, 7)),      # TTTP
     ("ij,ir,jr->ij", (20, 15)),              # SDDMM (order-2 TTTP)
     ("ijk,ir,kr->ijk", (13, 11, 7)),         # partial TTTP
+    ("ijk,jr,kr,iy,jy,ky->ir", (13, 11, 7)),  # weighted Gram matvec (eq. 3)
+    ("ijk,jr,kr,iy,jy,ky->ri", (13, 11, 7)),  # ... rank-first output
+    ("ijkl,jr,kr,lr,iy,jy,ky,ly->ir", (9, 8, 7, 6)),  # ... order 4
     ("ijk->i", (13, 11, 7)),                 # single-mode reduction
     ("ijkl->il", (9, 8, 7, 6)),              # multi-mode subset reduction
     ("ijkl->li", (9, 8, 7, 6)),              # ... permuted output

@@ -96,18 +96,39 @@ def test_batched_cg_solves_spd(n, r, seed):
     np.testing.assert_allclose(mv(x), b, rtol=2e-3, atol=2e-3)
 
 
+# clamp-region sampling shared with the hypothesis-free suite
+from test_losses import _sample as _loss_sample_points
+
+
 @given(st_.sampled_from(list(L.LOSSES)), st_.integers(0, 2 ** 31))
 def test_loss_grads_match_autodiff(name, seed):
-    """Hand-written loss gradients == jax.grad."""
+    """Hand-written loss gradients == jax.grad, clamp regions included."""
     loss = L.LOSSES[name]
-    key = jax.random.PRNGKey(seed % (2 ** 31))
-    t = jnp.abs(jax.random.normal(key, (50,))) + 0.1
-    if name == "logistic":
-        t = (t > 0.5).astype(jnp.float32)
-    m = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (50,))) + 0.1
+    t, m = _loss_sample_points(name, seed % (2 ** 31))
     got = loss.grad(t, m)
     want = jax.vmap(jax.grad(lambda mm, tt: loss.value(tt, mm)))(m, t)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st_.sampled_from(list(L.LOSSES)), st_.integers(0, 2 ** 31))
+def test_loss_hess_match_autodiff(name, seed):
+    """Hand-written loss curvatures == jax.grad of Loss.grad (the GGN
+    weights), clamp regions included — poisson curvature vanishes below the
+    floor, huber outside delta."""
+    loss = L.LOSSES[name]
+    t, m = _loss_sample_points(name, seed % (2 ** 31))
+    got = loss.hess(t, m)
+    want = jax.vmap(jax.grad(lambda mm, tt: loss.grad(tt, mm)))(m, t)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_poisson_grad_is_one_below_floor():
+    """Regression: the clamped poisson grad is exactly 1 where m ≤ ε (the
+    log(max(m, ε)) term is constant there), not 1 − t/ε."""
+    t = jnp.array([3.0, 1.0, 7.0])
+    m = jnp.array([-1.0, 0.0, L._EPS * 0.25])
+    np.testing.assert_allclose(L.poisson.grad(t, m), jnp.ones(3))
+    np.testing.assert_allclose(L.poisson.hess(t, m), jnp.zeros(3))
 
 
 @given(dims, st_.integers(5, 40), st_.integers(5, 40), st_.integers(0, 2 ** 31))
