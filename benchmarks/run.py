@@ -19,9 +19,9 @@ import time
 import traceback
 
 from benchmarks import (bench_ccd_variants, bench_completion,
-                        bench_gauss_newton, bench_gcp, bench_mttkrp,
-                        bench_planner, bench_redistribution, bench_ttm,
-                        bench_tttp)
+                        bench_distributed, bench_gauss_newton, bench_gcp,
+                        bench_mttkrp, bench_planner, bench_redistribution,
+                        bench_ttm, bench_tttp)
 from benchmarks.common import drain_records
 
 # (csv prefix, module, json group)
@@ -35,6 +35,7 @@ MODULES = [
     ("gcp_generalized_losses", bench_gcp, "gcp"),
     ("planner_dispatch", bench_planner, "planner"),
     ("ggn_gauss_newton", bench_gauss_newton, "completion"),
+    ("sec4_distributed_completion", bench_distributed, "distributed"),
 ]
 
 

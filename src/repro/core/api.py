@@ -26,6 +26,7 @@ from typing import Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.distributed import AxisCtx, LOCAL
 from repro.core.sparse_tensor import SparseTensor
 from repro import planner as _planner
 
@@ -55,14 +56,16 @@ def eye(n: int) -> jax.Array:
 
 
 def TTTP(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
-         path: Optional[str] = None, autotune: bool = False) -> SparseTensor:
+         path: Optional[str] = None, autotune: bool = False,
+         ctx: AxisCtx = LOCAL) -> SparseTensor:
     """Paper Listing 3; accepts None entries and vector factors."""
-    return _planner.planned_tttp(st, factors, path=path, autotune=autotune)
+    return _planner.planned_tttp(st, factors, path=path, autotune=autotune,
+                                 ctx=ctx)
 
 
 def einsum(expr: str, *operands: Tensor, path: Optional[str] = None,
            plan: Optional["_planner.Plan"] = None,
-           autotune: bool = False) -> Tensor:
+           autotune: bool = False, ctx: AxisCtx = LOCAL) -> Tensor:
     """Einstein summation over mixed sparse/dense operands.
 
     Supported sparse patterns (any tensor order, one sparse operand):
@@ -75,13 +78,16 @@ def einsum(expr: str, *operands: Tensor, path: Optional[str] = None,
 
     ``path=`` forces one of the plan's candidate paths (see
     ``repro.planner.candidate_paths``); the default lets the cost model pick.
+    ``ctx=`` names the mesh axes the call runs under (inside ``shard_map``):
+    dispatch applies the matching collectives and the ranking includes the
+    communication terms (DESIGN.md §9).
     """
     return _planner.planned_einsum(expr, *operands, path=path, plan=plan,
-                                   autotune=autotune)
+                                   autotune=autotune, ctx=ctx)
 
 
 def plan(expr: str, *operands: Tensor, path: Optional[str] = None,
-         autotune: bool = False) -> "_planner.Plan":
+         autotune: bool = False, ctx: AxisCtx = LOCAL) -> "_planner.Plan":
     """Inspect/precompute the plan ``einsum`` would use for this call."""
     return _planner.plan_contraction(expr, operands, path=path,
-                                     autotune=autotune)
+                                     autotune=autotune, ctx=ctx)

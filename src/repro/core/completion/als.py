@@ -44,14 +44,20 @@ def gram_matvec(omega: SparseTensor, factors: Sequence[jax.Array], mode: int,
     ``matvec_path`` routes the WHOLE weighted matvec through the planner's
     ``cg_matvec`` family instead — ``"fused"`` (single-pass
     ``kernels.ops.cg_matvec_bucketed``), ``"tttp_mttkrp"``, ``"sliced"``,
-    ``"dense"``, or ``"auto"`` (§5.3 cost model decides). Only applies when
-    factors are replicated (no model axis): under column sharding the
-    TTTP half needs a psum(model) between the halves."""
-    if matvec_path is not None and ctx.model is None:
+    ``"dense"``, or ``"auto"`` (§5.3 cost model decides). Works under any
+    ctx: dispatch inserts the psum(model) between the halves and the
+    psum(data) on the output (under a model axis the fused/dense candidates
+    are excluded — the intermediate psum cannot be fused)."""
+    if matvec_path is not None:
         from repro.planner import planned_cg_matvec
         path = None if matvec_path == "auto" else matvec_path
-        y = ctx.psum_data(planned_cg_matvec(omega, list(factors), mode, x,
-                                            path=path))
+        if path in ("fused", "dense") and ctx.model is not None:
+            # neither candidate can express the inter-half psum(model);
+            # degrade to the cost-model choice rather than raising (the
+            # fused path's local-fallback story, applied to the mesh)
+            path = None
+        y = planned_cg_matvec(omega, list(factors), mode, x, path=path,
+                              ctx=ctx)
         return y + lam * x
     fs = list(factors)
     fs[mode] = x

@@ -62,28 +62,28 @@ def _ccd_column_update_einsum(rho, st, cols, mode, lam, ctx):
 
 
 def _ccd_column_update_tttp(rho, st, cols, mode, lam, ctx, path=None):
-    """Same update routed through TTTP + sparse mode-reduction (Listing 6).
-    ``path`` opts the TTTP contractions into planner dispatch.
+    """Same update routed through TTTP + sparse mode-reduction (Listing 6),
+    both dispatched through the planner executor with ``ctx`` (DESIGN.md
+    §9). ``path`` forces the TTTP contractions onto a planner candidate.
 
     Two TTTP kernel calls per column update: vw = TTTP(Ω, [None,v,w]) is
     computed once and reused for both the numerator reduction
     (a = Σ_i ρ·vw, since TTTP(ρ,·).values ≡ ρ·vw on the shared Ω pattern)
     and the residual update."""
+    from repro.core.distributed import reduce_mode_ctx, tttp_ctx
     other = [d for d in range(st.ndim) if d != mode]
     fac = [None] * st.ndim
     fac2 = [None] * st.ndim
     for d in other:
         fac[d] = cols[d]
         fac2[d] = jnp.square(cols[d])
-    from repro.planner import tttp_fn
-    tttp_k = tttp_fn(path)
     omega = st.with_values(jnp.ones_like(rho) * st.mask)
-    vw_sp = tttp_k(omega, fac)                        # vw = TTTP(Ω,[None,v,w])
+    vw_sp = tttp_ctx(omega, fac, ctx, path=path)      # vw = TTTP(Ω,[None,v,w])
     vw = vw_sp.values
     a_sp = vw_sp.with_values(rho * vw)                # ≡ TTTP(ρ,[None,v,w])
-    a = ctx.psum_data(a_sp.reduce_mode(mode))          # a = einsum('ijk->i', A)
-    b_sp = tttp_k(omega, fac2)                        # B = TTTP(Ω,[None,v²,w²])
-    den0 = ctx.psum_data(b_sp.reduce_mode(mode))
+    a = reduce_mode_ctx(a_sp, mode, ctx)              # a = einsum('ijk->i', A)
+    b_sp = tttp_ctx(omega, fac2, ctx, path=path)      # B = TTTP(Ω,[None,v²,w²])
+    den0 = reduce_mode_ctx(b_sp, mode, ctx)
     new_col = (a + cols[mode] * den0) / (lam + den0)
     rows = st.indices[:, mode]
     delta = (cols[mode] - new_col)[rows] * vw

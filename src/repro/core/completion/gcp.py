@@ -48,19 +48,19 @@ def gcp_loss(st: SparseTensor, factors: Sequence[jax.Array], loss: Loss,
 def gcp_gradients(st: SparseTensor, factors: Sequence[jax.Array], loss: Loss,
                   lam: float, ctx: AxisCtx = LOCAL,
                   mttkrp_path: Optional[str] = None) -> List[jax.Array]:
-    """Per-factor gradients; ``mttkrp_path`` opts the MTTKRP contractions
-    into planner dispatch (repro.planner, DESIGN.md §5)."""
+    """Per-factor gradients, MTTKRPs dispatched through the planner
+    executor with ``ctx`` (psum(data) inside dispatch — DESIGN.md §9);
+    ``mttkrp_path`` forces a planner candidate."""
+    from repro.core.distributed import mttkrp_ctx
     from repro.core.tttp import multilinear_values
     model = ctx.psum_model(multilinear_values(st, list(factors)))
     g_vals = jnp.where(st.mask, loss.grad(st.values, model), 0.0)
     g_st = st.with_values(g_vals)
-    from repro.planner import mttkrp_fn
-    mttkrp = mttkrp_fn(mttkrp_path)
     grads = []
     for d in range(st.ndim):
         fs = list(factors)
         fs[d] = None
-        grads.append(ctx.psum_data(mttkrp(g_st, fs, d))
+        grads.append(mttkrp_ctx(g_st, fs, d, ctx, path=mttkrp_path)
                      + 2.0 * lam * factors[d])
     return grads
 

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 from repro.core.distributed import AxisCtx, LOCAL
 from repro.core.sparse_tensor import SparseTensor
 from repro.core.utils import axis_size
-from repro.sparse import ops as sops
 
 
 def sample_entries(key, st: SparseTensor, sample_size: int) -> SparseTensor:
@@ -52,9 +51,11 @@ def sgd_sweep(key, st: SparseTensor, factors: Sequence[jax.Array],
     The data-term estimator is unbiased per shard: each shard samples its
     local valid entries and scales by (local_valid / sample_size); the psum
     over data axes then sums the per-shard expectations."""
+    from repro.core.distributed import mttkrp_ctx
     from repro.core.tttp import multilinear_values
-    if ctx.data is not None:
-        # decorrelate per-shard sampling
+    if ctx.data is not None and ctx.data_size() > 1:
+        # decorrelate per-shard sampling (single-shard data axes keep the
+        # caller's key, so a size-1 data axis reproduces the LOCAL run)
         names = ctx.data if isinstance(ctx.data, tuple) else (ctx.data,)
         idx = 0
         for n in names:
@@ -65,11 +66,13 @@ def sgd_sweep(key, st: SparseTensor, factors: Sequence[jax.Array],
     fs = list(factors)
     for d in range(st.ndim):
         model = ctx.psum_model(multilinear_values(sample, fs))
-        resid = sample.with_values(model - sample.values)  # (⟨·⟩ − t)
+        # fold the per-shard (local_valid / S) unbiasing into the residual
+        # values: MTTKRP is linear in them, so the executor's psum(data)
+        # sums the per-shard expectations
+        resid = sample.with_values((model - sample.values) * scale)
         g_fs = list(fs)
         g_fs[d] = None
-        grad = sops.mttkrp(resid, g_fs, d)
-        grad = ctx.psum_data(grad * scale)
+        grad = mttkrp_ctx(resid, g_fs, d, ctx)
         grad = 2.0 * grad + 2.0 * lam * fs[d]
         fs[d] = fs[d] - lr * grad
     return fs

@@ -3,7 +3,11 @@
 The completion algorithms (``repro.core.completion``) are written against an
 :class:`AxisCtx` that abstracts over local vs. distributed execution — user
 algorithm code is *parallelism-oblivious*, the paper's central thesis. The
-mapping (DESIGN.md §4):
+ctx primitives here (``tttp_ctx``/``mttkrp_ctx``/``reduce_mode_ctx``/
+``mttkrp_rowsharded``) are shims over the planner executor
+(``repro.planner``, DESIGN.md §9): the ctx rides into the plan's
+distribution signature and dispatch applies the collectives. The mapping
+(DESIGN.md §4):
 
 * nonzeros sharded over the data axes (flattened ``("pod","data")`` on the
   multi-pod mesh) — the paper's distribution of observed entries;
@@ -53,6 +57,9 @@ class AxisCtx:
         names = self.data if isinstance(self.data, tuple) else (self.data,)
         return int(np.prod([axis_size(n) for n in names]))
 
+    def model_size(self) -> int:
+        return axis_size(self.model) if self.model is not None else 1
+
     def model_index(self):
         return jax.lax.axis_index(self.model) if self.model is not None else 0
 
@@ -76,10 +83,13 @@ class DistLayout:
         return P(self.data_axes if len(self.data_axes) > 1 else self.data_axes[0])
 
     def sparse_specs(self, st: SparseTensor):
+        """SparseTensor-shaped pytree of PartitionSpecs (nonzeros over the
+        data axes; the valid mask shards with the values)."""
         d = self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
         idx_spec = P(d, None)
         val_spec = P(d) if st.values.ndim == 1 else P(d, None)
-        return SparseTensor(idx_spec, val_spec, st.shape, st.nnz, st.sorted_mode)
+        return SparseTensor(idx_spec, val_spec, P(d), st.shape, st.nnz,
+                            st.sorted_mode)
 
     def factor_spec(self) -> P:
         return P(None, self.model_axis)  # rows replicated, columns H-sliced
@@ -91,31 +101,40 @@ class DistLayout:
 
 # ---------------------------------------------------------------------------
 # ctx-parameterized primitives (used inside completion algorithms)
+#
+# These are thin shims over the planner executor (DESIGN.md §9): the
+# contraction is classified, candidate paths ranked with the communication
+# terms the ctx implies, and the winner dispatched with the ctx's psums
+# applied inside dispatch — a single execution layer from IR to mesh.
 # ---------------------------------------------------------------------------
 
 def tttp_ctx(st: SparseTensor, factors, ctx: AxisCtx,
              kernel_fn=None, path: Optional[str] = None) -> SparseTensor:
-    """TTTP under AxisCtx: factors column-sharded ⇒ local partial + psum.
-
-    ``path`` opts into planner dispatch (``repro.planner.planned_tttp``);
-    it only applies when factors are replicated (no model axis) — under
-    column sharding the partial-inner-product structure is fixed."""
-    if path is not None and ctx.model is None and kernel_fn is None:
-        from repro.planner import tttp_fn
-        return tttp_fn(path)(st, factors)
-    from repro.core.tttp import multilinear_values
-    fn = kernel_fn or multilinear_values
-    partial = fn(st, factors)
-    return st.with_values(st.values * ctx.psum_model(partial))
+    """TTTP under AxisCtx: factors column-sharded over the model axis ⇒
+    local partial inner products + psum(model), via planner dispatch.
+    ``path`` forces a planner candidate; ``kernel_fn`` bypasses the planner
+    with a raw values-kernel (benchmark escape hatch)."""
+    if kernel_fn is not None:
+        partial = kernel_fn(st, factors)
+        return st.with_values(st.values * ctx.psum_model(partial))
+    from repro.planner import planned_tttp
+    return planned_tttp(st, factors, path=path, ctx=ctx)
 
 
 def mttkrp_ctx(st: SparseTensor, factors, mode: int, ctx: AxisCtx,
                path: Optional[str] = None) -> jax.Array:
-    """MTTKRP under AxisCtx: local segment-sum + psum over data axes.
-    Output is (rows, R_local): replicated over data, column-sharded.
-    ``path`` opts into planner dispatch for the local contraction."""
-    from repro.planner import mttkrp_fn
-    return ctx.psum_data(mttkrp_fn(path)(st, factors, mode))
+    """MTTKRP under AxisCtx via planner dispatch: local contraction + psum
+    over data axes (applied inside dispatch). Output is (rows, R_local):
+    replicated over data, column-sharded over model."""
+    from repro.planner import planned_mttkrp
+    return planned_mttkrp(st, factors, mode, path=path, ctx=ctx)
+
+
+def reduce_mode_ctx(st: SparseTensor, mode: int, ctx: AxisCtx) -> jax.Array:
+    """``einsum('ijk->i')``-style sparse mode reduction under AxisCtx (local
+    segment-sum + psum(data)), via planner dispatch."""
+    from repro.planner import planned_reduce
+    return planned_reduce(st, (mode,), ctx=ctx)
 
 
 def rowdot_ctx(a: jax.Array, b: jax.Array, ctx: AxisCtx) -> jax.Array:
@@ -184,6 +203,10 @@ def sparse_allreduce_butterfly(st: SparseTensor, axis_name: str) -> SparseTensor
 
 # ---------------------------------------------------------------------------
 # Row-sharded factors with H-sliced, overlap-friendly gathers (paper Fig. 2)
+#
+# ``multilinear_rowsharded`` / ``_mttkrp_rowsharded_impl`` are the raw
+# collective kernels the planner's "rowsharded" path dispatches onto;
+# ``mttkrp_rowsharded`` is the public planner shim.
 # ---------------------------------------------------------------------------
 
 def multilinear_rowsharded(st: SparseTensor, factors_local, ctx: AxisCtx,
@@ -226,15 +249,33 @@ def multilinear_rowsharded(st: SparseTensor, factors_local, ctx: AxisCtx,
 
 def mttkrp_rowsharded(st: SparseTensor, factors_local, mode: int,
                       ctx: AxisCtx, h_slices: int = 1) -> jax.Array:
-    """MTTKRP with row-sharded factors: per slice, gather the non-target
-    factors' columns, segment-sum locally, then REDUCE-SCATTER rows of the
-    output back to their owners (Θ(I·R/H) transients and payloads)."""
+    """MTTKRP with factor ROWS sharded over the data axes, via the planner's
+    ``rowsharded`` path: per slice, gather the non-target factors' columns,
+    segment-sum locally, then reduce-scatter output rows to their owners
+    (Θ(I·R/H) transients and payloads). Output is (rows_local, R)."""
+    from repro.planner import planned_mttkrp
+    return planned_mttkrp(st, factors_local, mode, ctx=ctx, rowsharded=True,
+                          h_slices=h_slices)
+
+
+def _mttkrp_rowsharded_impl(st: SparseTensor, factors_local, mode: int,
+                            ctx: AxisCtx, h_slices: int = 1) -> jax.Array:
+    """Raw gather/compute/reduce-scatter kernel behind
+    :func:`mttkrp_rowsharded` (invoked by planner dispatch)."""
     r = next(f.shape[1] for f in factors_local if f is not None)
     rs = -(-r // max(h_slices, 1))
     axis = ctx.data
-    n_rows_local = factors_local[mode].shape[0]
-    rows = st.indices[:, mode]
     n_rows = st.shape[mode]
+    # the target mode's rows are sharded evenly over the data axes (the
+    # target factor itself is not an operand of the contraction)
+    p = ctx.data_size()
+    if n_rows % p:
+        raise ValueError(
+            f"row-sharded MTTKRP needs mode {mode}'s extent ({n_rows}) "
+            f"divisible by the data-axis size ({p}) — the reduce-scatter "
+            f"returns equal row blocks to their owners")
+    n_rows_local = n_rows // p
+    rows = st.indices[:, mode]
     cols = []
     for h in range(max(h_slices, 1)):
         prod = (st.values * st.mask)[:, None]

@@ -40,6 +40,12 @@ class SparseTensor:
     shape: Tuple[int, ...]             # static logical shape (sparse modes)
     nnz: Optional[int] = None          # static GLOBAL nonzero count hint
     sorted_mode: Optional[int] = None  # mode by which entries are sorted
+    # Ingest-time CCSR bucket patterns, keyed (mode, block_rows). Shared by
+    # reference across value-preserving derivations (``with_values`` — the
+    # Ω pattern is identical) and dropped by pattern-changing ops and by the
+    # pytree protocol (inside jit the host-side views don't apply anyway).
+    _pattern_cache: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
@@ -120,14 +126,46 @@ class SparseTensor:
                             sorted_mode=mode)
 
     def with_values(self, values: jax.Array) -> "SparseTensor":
-        """Same pattern, new values (zeroed on padding)."""
+        """Same pattern, new values (zeroed on padding). Shares the cached
+        bucket patterns — the Ω pattern is unchanged, so cached views stay
+        valid and only the bucket values are re-gathered on use."""
         vmask = self.valid if values.ndim == 1 else self.valid[:, None]
         return SparseTensor(self.indices, jnp.where(vmask, values, 0),
-                            self.valid, self.shape, self.nnz, self.sorted_mode)
+                            self.valid, self.shape, self.nnz, self.sorted_mode,
+                            _pattern_cache=self._pattern_cache)
 
     def astype(self, dtype) -> "SparseTensor":
         return SparseTensor(self.indices, self.values.astype(dtype),
-                            self.valid, self.shape, self.nnz, self.sorted_mode)
+                            self.valid, self.shape, self.nnz, self.sorted_mode,
+                            _pattern_cache=self._pattern_cache)
+
+    def row_buckets(self, mode: int, block_rows: int):
+        """Cached CCSR bucket view over ``mode`` (``repro.sparse.ccsr``).
+
+        The host-side pattern build runs once per (mode, block_rows) —
+        normally at ingest (``data.pipeline.CompletionDataset``) — and is
+        reused across ``with_values`` derivations; each call re-gathers the
+        current values through the cached pattern (jit-safe in values).
+        Returns ``None`` when the pattern is unavailable because the
+        indices are abstract (tracing) and nothing was cached — callers
+        fall back to the all-at-once kernels."""
+        if self.dense_dim is not None:
+            # trailing-dense values have no bucket view — checked before the
+            # cache lookup: a with_values derivation can widen the values
+            # while sharing a pattern built from the scalar-valued sibling
+            return None
+        if self._pattern_cache is None:
+            object.__setattr__(self, "_pattern_cache", {})
+        key = (int(mode), int(block_rows))
+        pat = self._pattern_cache.get(key)
+        if pat is None:
+            if (isinstance(self.indices, jax.core.Tracer)
+                    or isinstance(self.valid, jax.core.Tracer)):
+                return None
+            from repro.sparse.ccsr import bucket_pattern
+            pat = bucket_pattern(self, mode, block_rows)
+            self._pattern_cache[key] = pat
+        return pat.gather(self)
 
     def todense(self) -> jax.Array:
         """Materialize (small tensors / tests only)."""

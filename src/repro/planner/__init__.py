@@ -15,23 +15,28 @@ Layering::
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 
+from repro.core.distributed import AxisCtx, LOCAL
 from repro.core.sparse_tensor import SparseTensor
+from repro.planner import config as _pconfig
+from repro.planner.config import (DEFAULT_CONFIG, PlannerConfig,
+                                  default_config, set_default_config)
 from repro.planner.cost import PathCost, candidate_paths, estimate, rank_paths
 from repro.planner.dispatch import execute
-from repro.planner.ir import ContractionIR, build_ir
+from repro.planner.ir import ContractionIR, DistInfo, build_ir
 from repro.planner.plan import (Plan, clear_plan_cache, plan_cache_size,
                                 plan_contraction)
 
 __all__ = [
-    "ContractionIR", "PathCost", "Plan",
+    "ContractionIR", "DistInfo", "PathCost", "Plan", "PlannerConfig",
+    "DEFAULT_CONFIG", "default_config", "set_default_config",
     "build_ir", "candidate_paths", "estimate", "rank_paths",
     "plan_contraction", "clear_plan_cache", "plan_cache_size",
     "execute", "planned_einsum", "planned_mttkrp", "planned_tttp",
-    "planned_cg_matvec", "mttkrp_fn", "tttp_fn",
+    "planned_cg_matvec", "planned_reduce", "mttkrp_fn", "tttp_fn",
 ]
 
 # mode letters for synthesized expressions; 'z' is reserved for the kept
@@ -62,16 +67,21 @@ def tttp_fn(path: Optional[str] = None):
 
 
 def planned_einsum(expr: str, *operands, path: Optional[str] = None,
-                   plan: Optional[Plan] = None, autotune: bool = False):
+                   plan: Optional[Plan] = None, autotune: bool = False,
+                   ctx: AxisCtx = LOCAL, rowsharded: bool = False,
+                   config: Optional[PlannerConfig] = None):
     """Einsum through the planner; ``path=`` forces a candidate, ``plan=``
-    bypasses planning entirely (the caller owns signature compatibility)."""
+    bypasses planning entirely (the caller owns signature compatibility),
+    ``ctx=`` names the mesh axes the call runs under (collectives applied
+    inside dispatch, communication terms in the ranking — DESIGN.md §9)."""
     if plan is None:
         if not any(isinstance(op, SparseTensor) for op in operands):
             # pure-dense: nothing to plan — delegate untouched, preserving
             # jnp.einsum's acceptance of lists/scalars
             import jax.numpy as jnp
             return jnp.einsum(expr, *operands)
-        plan = plan_contraction(expr, operands, path=path, autotune=autotune)
+        plan = plan_contraction(expr, operands, path=path, autotune=autotune,
+                                ctx=ctx, rowsharded=rowsharded, config=config)
     return plan.execute(operands)
 
 
@@ -83,20 +93,38 @@ def _synth_expr(ndim: int, factor_modes: Sequence[int], out: str) -> str:
 
 def planned_mttkrp(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
                    mode: int, path: Optional[str] = None,
-                   autotune: bool = False) -> jax.Array:
+                   autotune: bool = False, ctx: AxisCtx = LOCAL,
+                   rowsharded: bool = False, h_slices: int = 1,
+                   config: Optional[PlannerConfig] = None) -> jax.Array:
     """Classic MTTKRP onto ``mode`` via the planner (drop-in for
-    ``repro.sparse.ops.mttkrp``). ``factors[mode]`` is ignored/None."""
+    ``repro.sparse.ops.mttkrp``). ``factors[mode]`` is ignored/None.
+    ``rowsharded`` declares factor rows sharded over ``ctx``'s data axes
+    (dispatches the gather/reduce-scatter path, H-sliced by ``h_slices``)."""
     present = [d for d in range(st.ndim) if d != mode and factors[d] is not None]
     out = _MODE_LETTERS[mode] + _RANK_LETTER
     expr = _synth_expr(st.ndim, present, out)
     ops = (st, *[factors[d] for d in present])
-    return planned_einsum(expr, *ops, path=path, autotune=autotune)
+    if h_slices != 1:
+        config = (config or _pconfig.default_config()).with_h_slices(h_slices)
+    return planned_einsum(expr, *ops, path=path, autotune=autotune,
+                          ctx=ctx, rowsharded=rowsharded, config=config)
+
+
+def planned_reduce(st: SparseTensor, keep_modes: Tuple[int, ...],
+                   path: Optional[str] = None,
+                   ctx: AxisCtx = LOCAL) -> jax.Array:
+    """Sparse mode-subset reduction via the planner (drop-in for
+    ``SparseTensor.reduce_mode`` with psum(data) under ``ctx``)."""
+    s_term = _MODE_LETTERS[:st.ndim]
+    expr = s_term + "->" + "".join(s_term[d] for d in keep_modes)
+    return planned_einsum(expr, st, path=path, ctx=ctx)
 
 
 def planned_cg_matvec(weights: SparseTensor,
                       factors: Sequence[jax.Array], mode: int,
                       x: jax.Array, path: Optional[str] = None,
-                      autotune: bool = False) -> jax.Array:
+                      autotune: bool = False, ctx: AxisCtx = LOCAL,
+                      config: Optional[PlannerConfig] = None) -> jax.Array:
     """Weighted Gram matvec (paper §2.2 + eq. 3) via the planner:
 
         y[i, r] = Σ_{n: i_mode(n)=i} ω_n (Π_{d≠mode} A_d[i_d, r]) ·
@@ -121,12 +149,15 @@ def planned_cg_matvec(weights: SparseTensor,
     expr = ",".join(terms) + "->" + s_term[mode] + _RANK_LETTER
     ops = (weights, *[factors[d] for d in others], x,
            *[factors[d] for d in others])
-    return planned_einsum(expr, *ops, path=path, autotune=autotune)
+    return planned_einsum(expr, *ops, path=path, autotune=autotune,
+                          ctx=ctx, config=config)
 
 
 def planned_tttp(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
-                 path: Optional[str] = None,
-                 autotune: bool = False) -> SparseTensor:
+                 path: Optional[str] = None, autotune: bool = False,
+                 ctx: AxisCtx = LOCAL, rowsharded: bool = False,
+                 h_slices: int = 1,
+                 config: Optional[PlannerConfig] = None) -> SparseTensor:
     """TTTP via the planner (drop-in for ``repro.core.tttp.tttp``): accepts
     None entries and vector factors, per the paper's Listing 3 surface."""
     fs: List[Optional[jax.Array]] = [
@@ -138,4 +169,7 @@ def planned_tttp(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
     s_term = _MODE_LETTERS[:st.ndim]
     expr = _synth_expr(st.ndim, present, s_term)
     ops = (st, *[fs[d] for d in present])
-    return planned_einsum(expr, *ops, path=path, autotune=autotune)
+    if h_slices != 1:
+        config = (config or _pconfig.default_config()).with_h_slices(h_slices)
+    return planned_einsum(expr, *ops, path=path, autotune=autotune,
+                          ctx=ctx, rowsharded=rowsharded, config=config)

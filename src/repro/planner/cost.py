@@ -29,13 +29,14 @@ from repro.planner import ir as pir
 # Machine-balance constants (per second): ranking only depends on the ratio.
 FLOP_RATE = 1.0e11   # fused multiply-adds / s
 MEM_RATE = 1.0e10    # words / s
+COMM_RATE = 1.0e9    # words / s over mesh links (≈10× slower than HBM)
 # words of traffic per element per sort-key column (multi-pass stable argsort)
 SORT_WORDS_PER_KEY = 8.0
 
 # Preference order used only to break exact score ties deterministically.
 _TIE_ORDER = ("all_at_once", "fused", "tttp_mttkrp", "segment", "dense_output",
-              "bucketed", "sliced", "t_first", "hypersparse", "pairwise",
-              "kr_first", "dense")
+              "bucketed", "rowsharded", "sliced", "t_first", "hypersparse",
+              "pairwise", "kr_first", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,12 +44,15 @@ class PathCost:
     path: str
     flops: float
     mem: float          # words of memory traffic (input + transient + output)
+    comm: float = 0.0   # words moved over mesh links (psum / gather / scatter)
     note: str = ""
 
     @property
     def seconds(self) -> float:
-        """Roofline-style time proxy: compute + traffic (not overlapped)."""
-        return self.flops / FLOP_RATE + self.mem / MEM_RATE
+        """Roofline-style time proxy: compute + traffic + communication
+        (not overlapped)."""
+        return (self.flops / FLOP_RATE + self.mem / MEM_RATE
+                + self.comm / COMM_RATE)
 
 
 def _sort_traffic(m: int, key_cols: int) -> float:
@@ -66,7 +70,18 @@ def _factor_words(ir: pir.ContractionIR) -> float:
 
 
 def candidate_paths(ir: pir.ContractionIR) -> List[str]:
-    """Legal execution paths for this IR, unranked."""
+    """Legal execution paths for this IR, unranked. Distribution-aware:
+    row-sharded factors admit only the gather/scatter schedule, and a
+    sharded model axis (column-sliced R) rules out the paths that cannot
+    insert the inter-half psum(model) (DESIGN.md §9)."""
+    dist = ir.dist or pir.LOCAL_DIST
+    if dist.rowsharded:
+        if ir.kind == pir.TTTP or (ir.kind == pir.MTTKRP
+                                   and pir.is_classic_mttkrp(ir)):
+            return ["rowsharded"]
+        raise NotImplementedError(
+            f"row-sharded factors support TTTP and classic MTTKRP only, "
+            f"not {ir.kind!r} ({ir.expr!r})")
     if ir.kind == pir.DENSE:
         return ["dense"]
     if ir.kind == pir.REDUCE:
@@ -80,12 +95,70 @@ def candidate_paths(ir: pir.ContractionIR) -> List[str]:
             return ["all_at_once", "bucketed", "t_first", "kr_first", "dense"]
         return ["all_at_once", "dense"]
     if ir.kind == pir.CG_MATVEC:
+        if dist.model_size > 1:
+            # the contracted rank is column-sharded: the TTTP half must be
+            # psum(model)'d before the MTTKRP half — single-pass fusion and
+            # the densified fallback cannot express the intermediate psum
+            return ["tttp_mttkrp", "sliced"]
         return ["tttp_mttkrp", "fused", "sliced", "dense"]
     raise ValueError(f"unknown IR kind {ir.kind!r}")
 
 
 def estimate(ir: pir.ContractionIR, path: str) -> PathCost:
-    """Flop/traffic estimate for one (IR, path) pair."""
+    """Flop/traffic/communication estimate for one (IR, path) pair.
+
+    Flop and memory terms use the IR's (per-shard) operand sizes; the
+    communication term adds the collective volumes the distribution
+    signature implies (paper §4's per-kernel communication analysis), so
+    distributed variants rank against local ones on the same scale."""
+    cost = _base_estimate(ir, path)
+    comm = _comm_words(ir, path)
+    return dataclasses.replace(cost, comm=comm) if comm else cost
+
+
+def _psum_words(volume: float, axis_size: int) -> float:
+    """Ring all-reduce of ``volume`` words: ≈2V per device for size > 1."""
+    return 2.0 * volume if axis_size > 1 else 0.0
+
+
+def _comm_words(ir: pir.ContractionIR, path: str) -> float:
+    """Collective volume (words per device) for this (IR, path) under the
+    IR's distribution signature (DESIGN.md §9)."""
+    dist = ir.dist or pir.LOCAL_DIST
+    if ir.kind == pir.DENSE or dist.is_local:
+        return 0.0
+    shape = ir.sparse.shape
+    m = float(ir.nnz)
+    r = float(ir.rank_size)
+    if path == "rowsharded":
+        # all-gather each non-target factor's column slices (every device
+        # receives the full rows once per sweep over H slices) ...
+        gathered = sum(shape[d] * r for d in ir.factor_modes)
+        if ir.kind == pir.MTTKRP:
+            # ... plus the reduce-scatter of output rows to their owners
+            gathered += float(shape[ir.keep_modes[0]]) * r
+        return float(gathered)
+    if ir.kind == pir.REDUCE:
+        out = float(math.prod(shape[d] for d in ir.keep_modes) or 1)
+        return _psum_words(out, dist.data_size)
+    if ir.kind == pir.TTTP:
+        # local partial inner products over the column slice, psum(model)
+        return _psum_words(m, dist.model_size)
+    if ir.kind == pir.TTM:
+        others = float(math.prod(shape[d] for d in range(len(shape))
+                                 if d != ir.contract_mode))
+        return _psum_words(others * r, dist.data_size)
+    if ir.kind == pir.MTTKRP:
+        out = float(math.prod(shape[d] for d in ir.keep_modes) or 1) * r
+        return _psum_words(out, dist.data_size)
+    if ir.kind == pir.CG_MATVEC:
+        out = float(shape[ir.keep_modes[0]]) * r
+        return (_psum_words(m, dist.model_size)
+                + _psum_words(out, dist.data_size))
+    return 0.0
+
+
+def _base_estimate(ir: pir.ContractionIR, path: str) -> PathCost:
     if ir.kind == pir.DENSE:
         # jnp.einsum handles its own path; charge the naive product size.
         size = math.prod(s for _, s in ir.sizes)
@@ -110,6 +183,11 @@ def estimate(ir: pir.ContractionIR, path: str) -> PathCost:
 
     if ir.kind == pir.TTTP:
         base_in = coo_words + _factor_words(ir)
+        if path == "rowsharded":
+            # per-slice all-gathered factor columns, discarded after use;
+            # gather volume is charged as communication, not memory
+            return PathCost(path, m * r * (nf + 1), base_in + m,
+                            note="row-sharded per-slice gather (Fig. 2)")
         if path == "all_at_once":
             # the Pallas kernel streams R tiles and XLA fuses the jnp
             # gather-product-reduce chain: no (m, R) intermediate lands
@@ -155,14 +233,16 @@ def estimate(ir: pir.ContractionIR, path: str) -> PathCost:
             return PathCost(path, m * r * nf, base_in + m * r + out_words,
                             note="gather-product-segment-sum")
         if path == "bucketed":
-            # Dispatch re-runs the host-side bucketize on every call (and
-            # falls back to all_at_once under jit), so the per-call cost is
-            # always charged here — this path stays forcible for experiments
-            # but is never cost-preferred. The production TPU route is
-            # ingest-time bucketing + kernels.ops.mttkrp_bucketed directly.
-            return PathCost(path, m * r * nf,
-                            base_in + m * r + out_words + _sort_traffic(int(m), 1),
-                            note="per-call host bucketize + bucketed kernel")
+            # Consumes the ingest-time cached RowBlockBuckets view attached
+            # to the SparseTensor (values re-gathered per call through the
+            # cached pattern), so no per-call bucketize is charged; under
+            # tracing without a cached pattern dispatch falls back to
+            # all_at_once, which this formula then matches.
+            return PathCost(path, m * r * nf, base_in + m * r + out_words,
+                            note="ingest-cached buckets + one-hot matmul")
+        if path == "rowsharded":
+            return PathCost(path, m * r * nf, base_in + m * r + out_words,
+                            note="row-sharded gather + psum-scatter (Fig. 2)")
         if path == "t_first":
             mode = ir.keep_modes[0]
             last = [d for d in range(n) if d != mode][-1]
@@ -193,13 +273,11 @@ def estimate(ir: pir.ContractionIR, path: str) -> PathCost:
                             base_in + 2 * m + out_words,
                             note="TTTP + MTTKRP composition (eq. 3)")
         if path == "fused":
-            # one pass per nonzero, KR gather shared across both halves; as
-            # with bucketed MTTKRP, eager dispatch pays a per-call host
-            # bucketize (production: ingest-time buckets + kernels.ops
-            # cg_matvec_bucketed directly)
-            return PathCost(path, m * r * (nf + 2),
-                            base_in + out_words + _sort_traffic(int(m), 1),
-                            note="fused single-pass kernel + per-call bucketize")
+            # one pass per nonzero, KR gather shared across both halves,
+            # over the ingest-time cached buckets (no per-call bucketize;
+            # without a cached pattern dispatch falls back to tttp_mttkrp)
+            return PathCost(path, m * r * (nf + 2), base_in + out_words,
+                            note="fused single-pass kernel, cached buckets")
         if path == "sliced":
             h = _sliced_h(int(r))
             return PathCost(path, m * r * (2 * nf + 1),

@@ -1,19 +1,34 @@
-"""Plan dispatcher — lowers a chosen (IR, path) onto the kernel library.
+"""Plan dispatcher — lowers a chosen (IR, path) onto the kernel library,
+applying the collectives the plan's AxisCtx implies (one execution layer
+from IR to mesh, DESIGN.md §9).
 
 Each contraction family maps onto ``repro.sparse.ops`` / ``repro.kernels``
 (which internally select the Pallas kernels when their block-size
 preconditions hold, jnp fallbacks otherwise):
 
-* REDUCE  → linearized multi-mode segment-sum (arbitrary kept-mode subsets);
+* REDUCE  → linearized multi-mode segment-sum (arbitrary kept-mode subsets),
+  psum(data) on the dense output;
 * TTTP    → ``kernels.ops.tttp`` (Pallas/ref), pairwise or H-sliced variants;
-* TTM     → dense-output scatter-add or hypersparse compressed-key kernel;
+  under a model axis (column-sliced R) the local partial values are
+  psum(model)'d;
+* TTM     → dense-output scatter-add or hypersparse compressed-key kernel,
+  psum(data) on the dense output;
 * MTTKRP  → all-at-once gather–product–segment-sum, CCSR-bucketed kernel,
-  pairwise T-first / KR-first, or the generalized multi-output-mode form.
+  pairwise T-first / KR-first, or the generalized multi-output-mode form;
+  psum(data) on the (rows, R_local) output;
+* CG_MATVEC → the eq.-3 weighted Gram matvec: the TTTP half is psum(model)'d
+  before the MTTKRP half, the output psum(data)'d;
+* rowsharded → factor ROWS sharded over the data axes (paper Fig. 2):
+  per-slice all-gather + local compute (+ reduce-scatter for MTTKRP),
+  dispatched onto ``repro.core.distributed``'s collective kernels.
 
 Every path of a given IR computes the same einsum, so forcing paths is a
 numerical no-op (tested in ``tests/test_planner.py``). All jnp paths are
-jit-safe; the ``bucketed`` path needs host-side bucketing and silently falls
-back to ``all_at_once`` under tracing.
+jit-safe; the ``bucketed``/``fused`` paths consume the ingest-time cached
+``RowBlockBuckets`` view on the SparseTensor (``SparseTensor.row_buckets``)
+— values are re-gathered through the cached pattern per call — and fall
+back to ``all_at_once``/``tttp_mttkrp`` when no pattern is available under
+tracing.
 """
 from __future__ import annotations
 
@@ -24,17 +39,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tttp as core_tttp
+from repro.core.distributed import AxisCtx, LOCAL
 from repro.core.sparse_tensor import SparseTensor
 from repro.core.utils import linearize
 from repro.kernels import ops as kops
 from repro.planner import ir as pir
+from repro.planner.config import PlannerConfig, default_config
 from repro.planner.cost import _sliced_h
 from repro.sparse import ops as sops
-from repro.sparse.ccsr import bucketize
-
-
-def _is_tracer(x) -> bool:
-    return isinstance(x, jax.core.Tracer)
 
 
 def _split_operands(ir: pir.ContractionIR, operands: Sequence):
@@ -74,29 +86,36 @@ def _densified_einsum(ir: pir.ContractionIR, st: SparseTensor,
 # per-kind executors
 # ---------------------------------------------------------------------------
 
-def _exec_reduce(ir: pir.ContractionIR, st: SparseTensor, path: str):
+def _exec_reduce(ir: pir.ContractionIR, st: SparseTensor, path: str,
+                 ctx: AxisCtx):
     if path == "dense" and st.dense_dim is None:
-        return _densified_einsum(ir, st, ())
+        return ctx.psum_data(_densified_einsum(ir, st, ()))
     # trailing-dense values ride along unreduced (reduce_mode semantics);
     # the densify fallback cannot express them, so it also lands here
     if not ir.keep_modes:
-        return st.sum()
+        return ctx.psum_data(st.sum())
     kept_shape = tuple(st.shape[d] for d in ir.keep_modes)
     k = int(math.prod(kept_shape))
     lin = linearize(st.indices[:, list(ir.keep_modes)], kept_shape)
     out = jax.ops.segment_sum(st.masked_values(), lin, num_segments=k)
-    return out.reshape(kept_shape + out.shape[1:])
+    return ctx.psum_data(out.reshape(kept_shape + out.shape[1:]))
 
 
-def _exec_tttp(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
+def _exec_tttp(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str,
+               ctx: AxisCtx, config: PlannerConfig):
     factors = _factors_by_mode(ir, dense_ops)
+    if path == "rowsharded":
+        from repro.core.distributed import multilinear_rowsharded
+        acc = multilinear_rowsharded(st, factors, ctx,
+                                     h_slices=config.h_slices)
+        return st.with_values(st.values * acc)
     if path == "all_at_once":
-        return kops.tttp(st, factors)
-    if path == "sliced":
-        return core_tttp.tttp_sliced(st, factors, _sliced_h(ir.rank_size))
-    if path == "pairwise":
-        return core_tttp.tttp_pairwise(st, factors)
-    if path == "dense":
+        res = kops.tttp(st, factors)
+    elif path == "sliced":
+        res = core_tttp.tttp_sliced(st, factors, _sliced_h(ir.rank_size))
+    elif path == "pairwise":
+        res = core_tttp.tttp_pairwise(st, factors)
+    elif path == "dense":
         # Form the dense multilinear model over the covered modes only and
         # sample it per entry. (Gathering from a densified *result* would
         # double-count duplicate COO coordinates.)
@@ -106,11 +125,18 @@ def _exec_tttp(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
         terms = [ir.operands[i].term for i in ir.dense_positions]
         model = jnp.einsum(",".join(terms) + "->" + model_out, *dense_ops)
         vals = st.values * model[tuple(st.indices[:, d] for d in covered)]
-        return st.with_values(vals)
-    raise ValueError(f"unknown TTTP path {path!r}")
+        res = st.with_values(vals)
+    else:
+        raise ValueError(f"unknown TTTP path {path!r}")
+    if ctx.model is not None:
+        # values are linear in the per-column partial inner products, so
+        # the psum over column slices applies directly to them
+        res = res.with_values(ctx.psum_model(res.values))
+    return res
 
 
-def _exec_ttm(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
+def _exec_ttm(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str,
+              ctx: AxisCtx):
     (w,) = dense_ops
     mode = ir.contract_mode
     s_term = ir.sparse_term
@@ -120,10 +146,10 @@ def _exec_ttm(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
     elif path == "hypersparse":
         res = sops.ttm_hypersparse(st, w, mode).todense()
     elif path == "dense":
-        return _densified_einsum(ir, st, dense_ops)
+        return ctx.psum_data(_densified_einsum(ir, st, dense_ops))
     else:
         raise ValueError(f"unknown TTM path {path!r}")
-    return _reorder(res, canon, ir.out)
+    return ctx.psum_data(_reorder(res, canon, ir.out))
 
 
 def _mttkrp_general(ir: pir.ContractionIR, st: SparseTensor,
@@ -141,9 +167,10 @@ def _mttkrp_general(ir: pir.ContractionIR, st: SparseTensor,
     return res.reshape(kept_shape + (res.shape[-1],))
 
 
-def _exec_mttkrp(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
+def _exec_mttkrp(ir: pir.ContractionIR, st: SparseTensor, dense_ops,
+                 path: str, ctx: AxisCtx, config: PlannerConfig):
     if path == "dense":
-        return _densified_einsum(ir, st, dense_ops)
+        return ctx.psum_data(_densified_einsum(ir, st, dense_ops))
     factors = _factors_by_mode(ir, dense_ops)
     out_sparse = ir.out.replace(ir.rank_index, "")
     canon = out_sparse + ir.rank_index           # kept modes in out order, r last
@@ -151,21 +178,31 @@ def _exec_mttkrp(ir: pir.ContractionIR, st: SparseTensor, dense_ops, path: str):
         if path != "all_at_once":
             raise ValueError(f"path {path!r} requires the classic MTTKRP "
                              f"shape (one kept mode, all others contracted)")
-        return _reorder(_mttkrp_general(ir, st, factors), canon, ir.out)
+        return ctx.psum_data(
+            _reorder(_mttkrp_general(ir, st, factors), canon, ir.out))
     mode = ir.keep_modes[0]
-    if path == "bucketed" and not (_is_tracer(st.indices) or
-                                   _is_tracer(st.values)):
-        buckets = bucketize(st, mode, block_rows=8)
-        res = kops.mttkrp_bucketed(buckets, factors, num_rows=st.shape[mode])
-    elif path in ("all_at_once", "bucketed"):
-        res = sops.mttkrp(st, factors, mode)     # bucketed falls back in jit
+    if path == "rowsharded":
+        from repro.core.distributed import _mttkrp_rowsharded_impl
+        # the reduce-scatter inside already sums over the data axes
+        res = _mttkrp_rowsharded_impl(st, factors, mode, ctx,
+                                      h_slices=config.h_slices)
+        return _reorder(res, canon, ir.out)
+    if path == "bucketed":
+        buckets = st.row_buckets(mode, config.block_rows)
+        if buckets is not None:
+            res = kops.mttkrp_bucketed(buckets, factors,
+                                       num_rows=st.shape[mode])
+        else:                                    # tracing, no cached pattern
+            res = sops.mttkrp(st, factors, mode)
+    elif path == "all_at_once":
+        res = sops.mttkrp(st, factors, mode)
     elif path == "t_first":
         res = sops.mttkrp_pairwise_t_first(st, factors, mode)
     elif path == "kr_first":
         res = sops.mttkrp_pairwise_kr_first(st, factors, mode)
     else:
         raise ValueError(f"unknown MTTKRP path {path!r}")
-    return _reorder(res, canon, ir.out)
+    return ctx.psum_data(_reorder(res, canon, ir.out))
 
 
 def _cg_factor_groups(ir: pir.ContractionIR, dense_ops: Sequence):
@@ -186,31 +223,33 @@ def _cg_factor_groups(ir: pir.ContractionIR, dense_ops: Sequence):
 
 
 def _exec_cg_matvec(ir: pir.ContractionIR, st: SparseTensor, dense_ops,
-                    path: str):
+                    path: str, ctx: AxisCtx, config: PlannerConfig):
     """Weighted Gram matvec (paper eq. 3): values of ``st`` are the
-    curvature weights ω_n; ``s_fac[mode]`` is the CG direction x."""
+    curvature weights ω_n; ``s_fac[mode]`` is the CG direction x. Under a
+    model axis the TTTP half's partial is psum(model)'d before the MTTKRP
+    half; the output is psum(data)'d."""
     if path == "dense":
-        return _densified_einsum(ir, st, dense_ops)
+        return ctx.psum_data(_densified_einsum(ir, st, dense_ops))
     mode = ir.keep_modes[0]
     r_fac, s_fac = _cg_factor_groups(ir, dense_ops)
     x = s_fac[mode]
     canon = ir.sparse_term[mode] + ir.rank_index
     # the fused kernel computes the Khatri-Rao gather ONCE and reuses it for
     # both halves — only valid when both halves share the same factor
-    # objects (always true via planned_cg_matvec); otherwise, and under
-    # tracing (host bucketize), fall back to the composition
+    # objects (always true via planned_cg_matvec); without an ingest-time
+    # cached bucket pattern (tracing), fall back to the composition
     shared = all(s_fac[d] is r_fac[d] for d in range(len(r_fac)) if d != mode)
-    traced = (_is_tracer(st.indices) or _is_tracer(st.values) or
-              _is_tracer(x))
-    if path == "fused" and shared and not traced:
-        buckets = bucketize(st, mode, block_rows=8)
-        res = kops.cg_matvec_bucketed(buckets, r_fac, x,
-                                      num_rows=st.shape[mode])
-        return _reorder(res, canon, ir.out)
+    if path == "fused" and shared:
+        buckets = st.row_buckets(mode, config.block_rows)
+        if buckets is not None:
+            res = kops.cg_matvec_bucketed(buckets, r_fac, x,
+                                          num_rows=st.shape[mode])
+            return ctx.psum_data(_reorder(res, canon, ir.out))
     if path in ("fused", "tttp_mttkrp"):
-        z = st.with_values(st.values *
-                           core_tttp.multilinear_values(st, s_fac))
-        return _reorder(sops.mttkrp(z, r_fac, mode), canon, ir.out)
+        partial = ctx.psum_model(core_tttp.multilinear_values(st, s_fac))
+        z = st.with_values(st.values * partial)
+        return ctx.psum_data(_reorder(sops.mttkrp(z, r_fac, mode), canon,
+                                      ir.out))
     if path == "sliced":
         r2 = ir.size_of(ir.rank2_index)
         h2 = _sliced_h(r2)
@@ -220,7 +259,7 @@ def _exec_cg_matvec(ir: pir.ContractionIR, st: SparseTensor, dense_ops,
             sl = [None if f is None else f[:, h * rs2:(h + 1) * rs2]
                   for f in s_fac]
             acc = acc + core_tttp.multilinear_values(st, sl)
-        z = st.with_values(st.values * acc)
+        z = st.with_values(st.values * ctx.psum_model(acc))
         r1 = ir.rank_size
         h1 = _sliced_h(r1)
         rs1 = r1 // h1
@@ -228,23 +267,29 @@ def _exec_cg_matvec(ir: pir.ContractionIR, st: SparseTensor, dense_ops,
             z, [None if f is None else f[:, h * rs1:(h + 1) * rs1]
                 for f in r_fac], mode) for h in range(h1)]
         res = jnp.concatenate(cols, axis=1) if h1 > 1 else cols[0]
-        return _reorder(res, canon, ir.out)
+        return ctx.psum_data(_reorder(res, canon, ir.out))
     raise ValueError(f"unknown CG_MATVEC path {path!r}")
 
 
-def execute(ir: pir.ContractionIR, path: str, operands: Sequence):
-    """Run the contraction along ``path``. Operand list must match the IR."""
+def execute(ir: pir.ContractionIR, path: str, operands: Sequence,
+            ctx: Optional[AxisCtx] = None,
+            config: Optional[PlannerConfig] = None):
+    """Run the contraction along ``path``. Operand list must match the IR;
+    ``ctx`` supplies the mesh axes whose collectives dispatch applies (None
+    or LOCAL ⇒ single-device semantics)."""
+    ctx = ctx if ctx is not None else LOCAL
+    config = config if config is not None else default_config()
     if ir.kind == pir.DENSE:
         return jnp.einsum(ir.expr, *operands)
     st, dense_ops = _split_operands(ir, operands)
     if ir.kind == pir.REDUCE:
-        return _exec_reduce(ir, st, path)
+        return _exec_reduce(ir, st, path, ctx)
     if ir.kind == pir.TTTP:
-        return _exec_tttp(ir, st, dense_ops, path)
+        return _exec_tttp(ir, st, dense_ops, path, ctx, config)
     if ir.kind == pir.TTM:
-        return _exec_ttm(ir, st, dense_ops, path)
+        return _exec_ttm(ir, st, dense_ops, path, ctx)
     if ir.kind == pir.MTTKRP:
-        return _exec_mttkrp(ir, st, dense_ops, path)
+        return _exec_mttkrp(ir, st, dense_ops, path, ctx, config)
     if ir.kind == pir.CG_MATVEC:
-        return _exec_cg_matvec(ir, st, dense_ops, path)
+        return _exec_cg_matvec(ir, st, dense_ops, path, ctx, config)
     raise ValueError(f"unknown IR kind {ir.kind!r}")

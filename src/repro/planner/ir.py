@@ -43,6 +43,39 @@ KINDS = (DENSE, REDUCE, TTTP, TTM, MTTKRP, CG_MATVEC)
 
 
 @dataclasses.dataclass(frozen=True)
+class DistInfo:
+    """Static distribution signature of a contraction call (DESIGN.md §9).
+
+    Built from the :class:`~repro.core.distributed.AxisCtx` the caller runs
+    under (sizes resolved at trace time inside ``shard_map``):
+
+    * ``data_size``  — product of the data-axis sizes: nonzeros sharded,
+      factor rows replicated; outputs on factor rows need a psum(data);
+    * ``model_size`` — model-axis size: factor COLUMNS sharded (the paper's
+      H-slicing of R as a mesh axis); inner products over R need a
+      psum(model);
+    * ``rowsharded`` — factor ROWS sharded over the data axes instead
+      (the paper's Fig. 2 memory-scalable distribution): contractions must
+      all-gather column slices and reduce-scatter row outputs.
+
+    Operand shapes in the IR are the *local* (per-shard) shapes — flop and
+    memory terms are per-device automatically; ``DistInfo`` is what the
+    communication terms of the cost model key off.
+    """
+    data_size: int = 1
+    model_size: int = 1
+    rowsharded: bool = False
+
+    @property
+    def is_local(self) -> bool:
+        return (self.data_size == 1 and self.model_size == 1
+                and not self.rowsharded)
+
+
+LOCAL_DIST = DistInfo()
+
+
+@dataclasses.dataclass(frozen=True)
 class OperandInfo:
     """Static description of one einsum operand."""
     term: str                  # its index string
@@ -73,6 +106,8 @@ class ContractionIR:
     contract_mode: Optional[int] = None     # TTM: the contracted sparse mode
     rank2_index: Optional[str] = None       # CG_MATVEC: the contracted rank
                                             #   letter (the TTTP half)
+    dist: Optional[DistInfo] = None         # distribution signature (None =
+                                            #   local single-device run)
 
     # -- helpers -----------------------------------------------------------
     def size_of(self, idx: str) -> int:
@@ -88,9 +123,12 @@ class ContractionIR:
 
     @property
     def nnz(self) -> int:
-        """Best static nonzero estimate: the nnz hint, else the capacity."""
+        """Best static nonzero estimate: the nnz hint, else the capacity.
+        Clamped to the capacity — SparseTensor carries the GLOBAL nnz hint
+        through sharding, but inside shard_map the operand's cap is the
+        per-shard bound, and cost terms here are per-device."""
         sp = self.sparse
-        return sp.nnz if sp.nnz is not None else sp.cap
+        return sp.cap if sp.nnz is None else min(sp.nnz, sp.cap)
 
     @property
     def rank_size(self) -> int:
@@ -114,9 +152,21 @@ def normalize(expr: str) -> str:
     return expr.replace(" ", "")
 
 
-def build_ir(expr: str, operands: Sequence) -> ContractionIR:
+def build_ir(expr: str, operands: Sequence,
+             dist: Optional[DistInfo] = None) -> ContractionIR:
     """Parse + classify. Raises ``ValueError`` on malformed expressions and
-    ``NotImplementedError`` on patterns outside the supported families."""
+    ``NotImplementedError`` on patterns outside the supported families.
+
+    ``dist`` attaches the static distribution signature; with
+    ``dist.rowsharded`` the dense factors carry *local* row counts
+    (rows sharded over the data axes), so their mode extent is validated
+    against ``local_rows * data_size``."""
+    ir = _build_ir(expr, operands, dist)
+    return ir if dist is None else dataclasses.replace(ir, dist=dist)
+
+
+def _build_ir(expr: str, operands: Sequence,
+              dist: Optional[DistInfo]) -> ContractionIR:
     expr = normalize(expr)
     if "->" not in expr:
         raise ValueError(f"einsum expression must be explicit (have '->'): {expr!r}")
@@ -127,6 +177,7 @@ def build_ir(expr: str, operands: Sequence) -> ContractionIR:
                          f"{len(operands)} operands")
     infos = tuple(_operand_info(t, op) for t, op in zip(terms, operands))
 
+    rowsharded = dist is not None and dist.rowsharded
     sizes: Dict[str, int] = {}
     for info in infos:
         if len(info.term) != len(info.shape):
@@ -135,7 +186,12 @@ def build_ir(expr: str, operands: Sequence) -> ContractionIR:
         if len(set(info.term)) != len(info.term):
             raise NotImplementedError(
                 f"repeated index within a term is unsupported: {info.term!r}")
-        for c, s in zip(info.term, info.shape):
+        shape = info.shape
+        if rowsharded and not info.is_sparse and len(info.term) == 2:
+            # factor rows are sharded over the data axes: the logical mode
+            # extent is local_rows * data_size (sparse indices stay global)
+            shape = (shape[0] * dist.data_size, shape[1])
+        for c, s in zip(info.term, shape):
             if sizes.setdefault(c, int(s)) != int(s):
                 raise ValueError(f"index {c!r} has conflicting sizes "
                                  f"{sizes[c]} and {s} in {expr!r}")

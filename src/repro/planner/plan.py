@@ -2,13 +2,16 @@
 
 A :class:`Plan` binds a classified :class:`~repro.planner.ir.ContractionIR`
 to a chosen execution path with the full cost ranking attached. Plans are
-cached on the *static signature* of the call (DESIGN.md §5.3):
+cached on the *static signature* of the call (DESIGN.md §5.3, §9):
 
-    (normalized expr, per-operand (kind, shape, cap, nnz, dtype), override)
+    (normalized expr, per-operand (kind, shape, cap, nnz, dtype),
+     override, AxisCtx, rowsharded, PlannerConfig)
 
-so planning happens once per (expression, operand layout) — identical calls
-return the *identical* Plan object, and the key never touches array data,
-making ``plan_contraction`` safe to call at jax trace time.
+so planning happens once per (expression, operand layout, distribution) —
+identical calls return the *identical* Plan object, and the key never
+touches array data, making ``plan_contraction`` safe to call at jax trace
+time (including inside ``shard_map``, where the ctx's axis sizes resolve
+statically).
 
 ``autotune=True`` upgrades a plan by timing every candidate path once on the
 provided operands (skipped under tracing, where no concrete data exists) and
@@ -22,9 +25,12 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 
+from repro.core.distributed import AxisCtx, LOCAL
 from repro.planner import cost as pcost
 from repro.planner import dispatch as pdispatch
 from repro.planner import ir as pir
+from repro.planner.config import (DEFAULT_CONFIG, PlannerConfig,
+                                  default_config)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +41,8 @@ class Plan:
     ranking: Tuple[pcost.PathCost, ...]   # all candidates, cheapest first
     autotuned: bool = False
     timings: Optional[Tuple[Tuple[str, float], ...]] = None  # (path, seconds)
+    ctx: AxisCtx = LOCAL                  # mesh axes dispatch psums over
+    config: PlannerConfig = DEFAULT_CONFIG
 
     @property
     def candidates(self) -> Tuple[str, ...]:
@@ -48,11 +56,13 @@ class Plan:
         raise KeyError(path)
 
     def execute(self, operands: Sequence):
-        return pdispatch.execute(self.ir, self.path, operands)
+        return pdispatch.execute(self.ir, self.path, operands,
+                                 ctx=self.ctx, config=self.config)
 
 
-def _signature(expr: str, operands: Sequence,
-               path: Optional[str]) -> Tuple:
+def _signature(expr: str, operands: Sequence, path: Optional[str],
+               ctx: AxisCtx, dist: Optional[pir.DistInfo],
+               config: PlannerConfig) -> Tuple:
     sig = []
     for op in operands:
         if hasattr(op, "cap") and hasattr(op, "indices"):  # SparseTensor
@@ -63,7 +73,7 @@ def _signature(expr: str, operands: Sequence,
             # non-array operands (lists/scalars) is harmless
             sig.append(("dense", tuple(getattr(op, "shape", ())),
                         str(getattr(op, "dtype", type(op).__name__))))
-    return (pir.normalize(expr), tuple(sig), path)
+    return (pir.normalize(expr), tuple(sig), path, ctx, dist, config)
 
 
 _CACHE: Dict[Tuple, Plan] = {}
@@ -91,9 +101,10 @@ def _any_tracer(operands: Sequence) -> bool:
 
 
 def _time_path(ir: pir.ContractionIR, path: str, operands: Sequence,
-               iters: int = 3) -> float:
+               ctx: AxisCtx, config: PlannerConfig, iters: int = 3) -> float:
     def run():
-        return jax.block_until_ready(pdispatch.execute(ir, path, operands))
+        return jax.block_until_ready(
+            pdispatch.execute(ir, path, operands, ctx=ctx, config=config))
     run()                                    # warmup / compile
     best = float("inf")
     for _ in range(iters):
@@ -103,21 +114,44 @@ def _time_path(ir: pir.ContractionIR, path: str, operands: Sequence,
     return best
 
 
+def _dist_info(ctx: AxisCtx, rowsharded: bool) -> Optional[pir.DistInfo]:
+    """Static distribution signature of a ctx (axis sizes resolve at trace
+    time inside shard_map; LOCAL ⇒ None)."""
+    data = ctx.data_size()
+    model = ctx.model_size()
+    if data == 1 and model == 1 and not rowsharded:
+        return None
+    return pir.DistInfo(data, model, rowsharded)
+
+
 def plan_contraction(expr: str, operands: Sequence,
                      path: Optional[str] = None,
-                     autotune: bool = False) -> Plan:
+                     autotune: bool = False,
+                     ctx: AxisCtx = LOCAL,
+                     rowsharded: bool = False,
+                     config: Optional[PlannerConfig] = None) -> Plan:
     """Plan (or fetch the cached plan for) one einsum call.
 
     ``path`` forces a specific candidate (validated against the IR);
-    ``autotune`` measures all candidates once and pins the winner.
+    ``autotune`` measures all candidates once and pins the winner;
+    ``ctx`` names the mesh axes the call runs under — the cost model adds
+    the communication terms its axis sizes imply and dispatch applies the
+    matching collectives; ``rowsharded`` declares the dense factors'
+    ROWS sharded over the data axes (paper Fig. 2).
     """
-    key = _signature(expr, operands, path)
+    ctx = ctx if ctx is not None else LOCAL
+    config = config if config is not None else default_config()
+    # resolve the axis SIZES into the key, not just the ctx's axis names —
+    # two shard_map regions sharing names on different-size meshes must not
+    # alias to one plan (the ranking and candidate legality depend on sizes)
+    dist = _dist_info(ctx, rowsharded)
+    key = _signature(expr, operands, path, ctx, dist, config)
     cached = _CACHE.get(key)
     if cached is not None and (path is not None or cached.autotuned
                                or not autotune):
         return cached
 
-    ir = pir.build_ir(expr, operands)
+    ir = pir.build_ir(expr, operands, dist=dist)
     ranking = pcost.rank_paths(ir)
     candidates = tuple(c.path for c in ranking)
     if path is not None:
@@ -125,7 +159,7 @@ def plan_contraction(expr: str, operands: Sequence,
         if path not in candidates:
             raise ValueError(f"path {path!r} not legal for {expr!r}; "
                              f"candidates: {candidates}")
-        plan = Plan(ir, path, ranking)
+        plan = Plan(ir, path, ranking, ctx=ctx, config=config)
     elif autotune and not _any_tracer(operands):
         # only time candidates whose estimated footprint is sane — the dense
         # and KR-first fallbacks explode at low density and would OOM here
@@ -133,10 +167,12 @@ def plan_contraction(expr: str, operands: Sequence,
                     if c.mem <= AUTOTUNE_MEM_BUDGET_WORDS]
         if not feasible:
             feasible = [ranking[0].path]
-        timings = tuple((p, _time_path(ir, p, operands)) for p in feasible)
+        timings = tuple((p, _time_path(ir, p, operands, ctx, config))
+                        for p in feasible)
         winner = min(timings, key=lambda t: t[1])[0]
-        plan = Plan(ir, winner, ranking, autotuned=True, timings=timings)
+        plan = Plan(ir, winner, ranking, autotuned=True, timings=timings,
+                    ctx=ctx, config=config)
     else:
-        plan = Plan(ir, ranking[0].path, ranking)
+        plan = Plan(ir, ranking[0].path, ranking, ctx=ctx, config=config)
     _CACHE[key] = plan
     return plan

@@ -1,5 +1,6 @@
-from repro.sparse.ccsr import CCSRView, RowBlockBuckets, build_ccsr, bucketize
+from repro.sparse.ccsr import (BucketPattern, CCSRView, RowBlockBuckets,
+                               bucket_pattern, bucketize, build_ccsr)
 from repro.sparse import ops, redistribute
 
-__all__ = ["CCSRView", "RowBlockBuckets", "build_ccsr", "bucketize", "ops",
-           "redistribute"]
+__all__ = ["BucketPattern", "CCSRView", "RowBlockBuckets", "bucket_pattern",
+           "bucketize", "build_ccsr", "ops", "redistribute"]

@@ -130,22 +130,57 @@ class RowBlockBuckets:
         raise NotImplementedError
 
 
-def bucketize(st: SparseTensor, mode: int, block_rows: int,
-              capacity: Optional[int] = None,
-              capacity_multiple: int = 8) -> RowBlockBuckets:
-    """Host-side (numpy) bucket build; done once at ingest per (tensor, mode).
+@dataclasses.dataclass
+class BucketPattern:
+    """Ingest-time bucket layout over one mode of a fixed Ω pattern.
+
+    Everything index-derived (the sorted bucket assignment, local rows,
+    validity and the ``sel`` map from bucket slot back to its source COO
+    position) is precomputed from *concrete* indices once; bucket VALUES
+    are re-gathered per call through ``sel``, so tensors that share the
+    pattern (``SparseTensor.with_values``) rebuild their bucket view with
+    one jit-safe gather instead of a host-side sort."""
+
+    sel: jax.Array        # (nb, capacity) int32 source COO slot; padding → 0
+    indices: jax.Array    # (nb, capacity, ndim) int32 (global indices)
+    local_row: jax.Array  # (nb, capacity) int32 in [0, block_rows)
+    valid: jax.Array      # (nb, capacity) bool
+    mode: int
+    block_rows: int
+    shape: Tuple[int, ...]
+    cap: int              # source capacity the pattern was built against
+
+    def gather(self, st: SparseTensor) -> RowBlockBuckets:
+        """Bucket view of ``st``'s values through this pattern. ``st`` must
+        share the Ω pattern (indices/valid/shape) the pattern was built
+        from; jit-safe in ``st.values``."""
+        if st.cap != self.cap or st.shape != self.shape:
+            raise ValueError(f"pattern built for cap={self.cap} shape="
+                             f"{self.shape}, got cap={st.cap} shape={st.shape}")
+        vals = jnp.where(self.valid, st.masked_values()[self.sel], 0)
+        return RowBlockBuckets(vals, self.indices, self.local_row, self.valid,
+                               self.mode, self.block_rows, self.shape)
+
+
+def bucket_pattern(st: SparseTensor, mode: int, block_rows: int,
+                   capacity: Optional[int] = None,
+                   capacity_multiple: int = 8) -> BucketPattern:
+    """Host-side (numpy) bucket-pattern build; done once at ingest per
+    (Ω pattern, mode, block_rows) — requires concrete indices.
 
     Capacity defaults to the max bucket occupancy rounded up — with shuffled
     (cyclic-equivalent) data this is ≈ mean + O(√mean), the load-balance
     argument of the paper's cyclic layout."""
+    if st.dense_dim is not None:
+        raise ValueError("bucket views require scalar values")
     idx = np.asarray(st.indices)
-    vals = np.asarray(st.values)
     keep = np.asarray(st.valid)
-    idx, vals = idx[keep], vals[keep]
+    orig = np.nonzero(keep)[0].astype(np.int32)
+    idx = idx[keep]
     nnz = idx.shape[0]
     rows = idx[:, mode]
     order = np.argsort(rows, kind="stable")
-    idx, vals, rows = idx[order], vals[order], rows[order]
+    idx, rows, orig = idx[order], rows[order], orig[order]
     num_rows = st.shape[mode]
     nb = cdiv(num_rows, block_rows)
     bucket = rows // block_rows
@@ -156,14 +191,24 @@ def bucketize(st: SparseTensor, mode: int, block_rows: int,
         raise ValueError(f"bucket overflow: max occupancy {counts.max()} > "
                          f"capacity {capacity}; increase capacity")
     pos = np.arange(nnz) - np.concatenate([[0], np.cumsum(counts)])[:-1][bucket]
-    bvals = np.zeros((nb, capacity), vals.dtype)
+    bsel = np.zeros((nb, capacity), np.int32)
     bidx = np.zeros((nb, capacity, idx.shape[1]), np.int32)
     blocal = np.zeros((nb, capacity), np.int32)
     bvalid = np.zeros((nb, capacity), bool)
-    bvals[bucket, pos] = vals
+    bsel[bucket, pos] = orig
     bidx[bucket, pos] = idx
     blocal[bucket, pos] = rows - bucket * block_rows
     bvalid[bucket, pos] = True
-    return RowBlockBuckets(jnp.asarray(bvals), jnp.asarray(bidx),
-                           jnp.asarray(blocal), jnp.asarray(bvalid),
-                           mode, block_rows, st.shape)
+    return BucketPattern(jnp.asarray(bsel), jnp.asarray(bidx),
+                         jnp.asarray(blocal), jnp.asarray(bvalid),
+                         mode, block_rows, st.shape, st.cap)
+
+
+def bucketize(st: SparseTensor, mode: int, block_rows: int,
+              capacity: Optional[int] = None,
+              capacity_multiple: int = 8) -> RowBlockBuckets:
+    """One-shot bucket view: pattern build + value gather (see
+    :func:`bucket_pattern`; prefer ``SparseTensor.row_buckets`` which caches
+    the pattern across value updates)."""
+    return bucket_pattern(st, mode, block_rows, capacity,
+                          capacity_multiple).gather(st)

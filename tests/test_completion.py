@@ -117,13 +117,13 @@ def test_ccd_tttp_variant_uses_two_tttp_calls_per_column(monkeypatch):
     rho = residual_values(st, fs)
     cols = [f[:, 0] for f in fs]
     calls = []
-    orig = planner_mod.tttp_fn
+    orig = planner_mod.planned_tttp
 
-    def counting(path=None):
-        k = orig(path)
-        return lambda *a, **kw: calls.append(1) or k(*a, **kw)
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
 
-    monkeypatch.setattr(planner_mod, "tttp_fn", counting)
+    monkeypatch.setattr(planner_mod, "planned_tttp", counting)
     col_t, rho_t = _ccd_column_update_tttp(rho, st, cols, 0, 1e-6, LOCAL)
     assert len(calls) == 2, f"expected 2 TTTP calls, got {len(calls)}"
     col_e, rho_e = _ccd_column_update_einsum(rho, st, cols, 0, 1e-6, LOCAL)

@@ -80,6 +80,24 @@ _SCRIPT = textwrap.dedent("""
                                    rtol=5e-3, atol=5e-3)
     print("ALS-dist-ok")
 
+    # 3b) planner-routed weighted Gram matvec (cg_matvec family) under data
+    #     AND model sharding == local: dispatch inserts the inter-half
+    #     psum(model) and the output psum(data)
+    from repro.core.completion.als import gram_matvec
+    x0 = factors[0]
+    def d_gram(s, fs, x):
+        return gram_matvec(s, list(fs), 0, x, lam=1e-6, ctx=ctx,
+                           matvec_path="auto")
+    got = jax.jit(shard_map(d_gram, mesh=mesh,
+                            in_specs=(st_spec, (f_spec,) * 3, f_spec),
+                            out_specs=P(None, "model"), check_rep=False))(
+        omega, tuple(factors), x0)
+    want = gram_matvec(omega, factors, 0, x0, lam=1e-6, ctx=LOCAL,
+                       matvec_path="auto")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    print("GRAM-planner-dist-ok")
+
     # 4) butterfly sparse all-reduce == sum of per-shard blocks
     blocks = [SparseTensor.random(jax.random.fold_in(key, i), (32, 8), 40,
                                   cap=64) for i in range(8)]
