@@ -1,0 +1,104 @@
+"""Streaming-ingest throughput + peak-host-memory benchmark (DESIGN.md §10).
+
+The paper-scale claim under test: a synthetic ingest of N nonzeros completes
+with peak host memory bounded by the CHUNK size, not by N. Full mode runs
+the 50M-nnz configuration of the acceptance criterion; ``--quick`` scales
+nnz down for CI smoke.
+
+Modes measured (per-chunk RSS sampling via psutil, delta over the
+pre-ingest baseline):
+
+* ``stats``   — metadata-only ingest (``keep_entries=False``): exact
+  nnz_rows / bucket-occupancy planner hints, strictly O(chunk) resident;
+* ``spool``   — out-of-core ingest with per-shard spill runs on disk
+  (streaming phase O(chunk); shard merge deferred);
+* ``full``    — in-memory ingest + shard merge + packed SparseTensor
+  (the small-tensor path; peak O(nnz) by design, shown for contrast).
+
+The emitted ``derived`` column carries Mentries/s, the peak-RSS delta and
+the chunk budget so BENCH_ingest.json tracks the perf trajectory.
+"""
+from __future__ import annotations
+
+import gc
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data import streaming
+
+# generous sandbox: per-chunk work set is several transient copies of the
+# (idx, vals, lin, hash) arrays during dedup/sort, plus generator output
+CHUNK_BYTES_PER_ENTRY = 16           # int32[3] indices + float32 value
+PEAK_BUDGET_CHUNKS = 12.0            # peak must stay under this many chunks
+
+
+def _ingest_once(shape, nnz, chunk, num_shards, mode, spool_root):
+    import psutil                    # deferred: keep run.py importable
+    proc = psutil.Process()
+    gc.collect()
+    base = proc.memory_info().rss
+    peak = [0]
+
+    def sample(_stats):
+        peak[0] = max(peak[0], proc.memory_info().rss - base)
+
+    spool = None
+    if mode == "spool":
+        spool = tempfile.mkdtemp(dir=spool_root, prefix="ingest_spool_")
+    ing = streaming.StreamingIngest(
+        shape, num_shards, spool_dir=spool, block_rows=64,
+        keep_entries=(mode != "stats"))
+    t0 = time.perf_counter()
+    ing.consume(streaming.function_stream(11, shape, nnz, chunk),
+                progress=sample)
+    if mode == "full":
+        shards, stats = ing.finalize()
+        st = streaming.pack_shards(shards, shape, stats)
+        assert st.nnz == stats.nnz
+    else:
+        stats = ing.finalize_stats()
+    sample(stats)
+    seconds = time.perf_counter() - t0
+    if spool is not None:
+        shutil.rmtree(spool, ignore_errors=True)
+    assert stats.nnz and stats.nnz > 0.9 * nnz     # dups are rare at 1e-5ish
+    return seconds, peak[0]
+
+
+def run(quick: bool = False):
+    shape = (30_000, 20_000, 2_000)
+    chunk = 500_000 if quick else 2_000_000
+    spool_root = tempfile.mkdtemp(prefix="bench_ingest_")
+    cases = [
+        ("stats", 2_000_000 if quick else 50_000_000),
+        ("spool", 1_000_000 if quick else 50_000_000),
+        ("full", 300_000 if quick else 4_000_000),
+    ]
+    try:
+        for mode, nnz in cases:
+            seconds, peak = _ingest_once(shape, nnz, min(chunk, nnz),
+                                         num_shards=8, mode=mode,
+                                         spool_root=spool_root)
+            chunk_mb = min(chunk, nnz) * CHUNK_BYTES_PER_ENTRY / 2 ** 20
+            peak_mb = peak / 2 ** 20
+            bounded = peak_mb <= PEAK_BUDGET_CHUNKS * chunk_mb
+            emit(f"ingest_{mode}_{nnz // 1_000_000}M", seconds * 1e6,
+                 f"{nnz / seconds / 1e6:.2f}Mnnz/s peak={peak_mb:.0f}MB "
+                 f"chunk={chunk_mb:.0f}MB "
+                 f"chunk_bounded={'yes' if bounded else 'NO'}")
+            if mode in ("stats", "spool") and not bounded:
+                raise AssertionError(
+                    f"ingest mode {mode!r}: peak RSS {peak_mb:.0f}MB exceeds "
+                    f"{PEAK_BUDGET_CHUNKS:.0f}x chunk ({chunk_mb:.0f}MB) — "
+                    f"the O(chunk) memory bound regressed")
+    finally:
+        shutil.rmtree(spool_root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run(quick=os.environ.get("QUICK", "0") == "1")

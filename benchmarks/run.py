@@ -20,8 +20,8 @@ import traceback
 
 from benchmarks import (bench_ccd_variants, bench_completion,
                         bench_distributed, bench_gauss_newton, bench_gcp,
-                        bench_mttkrp, bench_planner, bench_redistribution,
-                        bench_ttm, bench_tttp)
+                        bench_ingest, bench_mttkrp, bench_planner,
+                        bench_redistribution, bench_ttm, bench_tttp)
 from benchmarks.common import drain_records
 
 # (csv prefix, module, json group)
@@ -34,6 +34,7 @@ MODULES = [
     ("sec5.5_ccd_variants", bench_ccd_variants, "ccd_variants"),
     ("gcp_generalized_losses", bench_gcp, "gcp"),
     ("planner_dispatch", bench_planner, "planner"),
+    ("sec6_streaming_ingest", bench_ingest, "ingest"),
     ("ggn_gauss_newton", bench_gauss_newton, "completion"),
     ("sec4_distributed_completion", bench_distributed, "distributed"),
 ]

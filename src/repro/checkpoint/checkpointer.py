@@ -115,6 +115,10 @@ class Checkpointer:
         # snapshot to host before returning so the caller may mutate state
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                   state)
+        # snapshot metadata too — callers pass live dicts (e.g. a growing
+        # metric history) that must reflect THIS step in the manifest
+        if metadata is not None:
+            metadata = json.loads(json.dumps(metadata))
 
         def work():
             save(self.directory, step, host_state, metadata, self.keep_last)

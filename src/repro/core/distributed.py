@@ -89,7 +89,7 @@ class DistLayout:
         idx_spec = P(d, None)
         val_spec = P(d) if st.values.ndim == 1 else P(d, None)
         return SparseTensor(idx_spec, val_spec, P(d), st.shape, st.nnz,
-                            st.sorted_mode)
+                            st.sorted_mode, st.nnz_rows)
 
     def factor_spec(self) -> P:
         return P(None, self.model_axis)  # rows replicated, columns H-sliced

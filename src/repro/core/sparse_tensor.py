@@ -40,6 +40,11 @@ class SparseTensor:
     shape: Tuple[int, ...]             # static logical shape (sparse modes)
     nnz: Optional[int] = None          # static GLOBAL nonzero count hint
     sorted_mode: Optional[int] = None  # mode by which entries are sorted
+    # static per-mode nonzero-row-count hint (hypersparse metadata) — set by
+    # streaming ingest (data.streaming.IngestStats) and consumed by the
+    # planner's cost model, which bounds segment/bucket output traffic by the
+    # number of rows actually touched rather than the mode extent
+    nnz_rows: Optional[Tuple[int, ...]] = None
     # Ingest-time CCSR bucket patterns, keyed (mode, block_rows). Shared by
     # reference across value-preserving derivations (``with_values`` — the
     # Ω pattern is identical) and dropped by pattern-changing ops and by the
@@ -50,13 +55,13 @@ class SparseTensor:
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
         return ((self.indices, self.values, self.valid),
-                (self.shape, self.nnz, self.sorted_mode))
+                (self.shape, self.nnz, self.sorted_mode, self.nnz_rows))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         indices, values, valid = children
-        shape, nnz, sorted_mode = aux
-        return cls(indices, values, valid, shape, nnz, sorted_mode)
+        shape, nnz, sorted_mode, nnz_rows = aux
+        return cls(indices, values, valid, shape, nnz, sorted_mode, nnz_rows)
 
     # -- basic properties ---------------------------------------------------
     @property
@@ -123,7 +128,7 @@ class SparseTensor:
         perm = jnp.argsort(key, stable=True)
         return SparseTensor(self.indices[perm], self.values[perm],
                             self.valid[perm], self.shape, self.nnz,
-                            sorted_mode=mode)
+                            sorted_mode=mode, nnz_rows=self.nnz_rows)
 
     def with_values(self, values: jax.Array) -> "SparseTensor":
         """Same pattern, new values (zeroed on padding). Shares the cached
@@ -132,12 +137,12 @@ class SparseTensor:
         vmask = self.valid if values.ndim == 1 else self.valid[:, None]
         return SparseTensor(self.indices, jnp.where(vmask, values, 0),
                             self.valid, self.shape, self.nnz, self.sorted_mode,
-                            _pattern_cache=self._pattern_cache)
+                            self.nnz_rows, _pattern_cache=self._pattern_cache)
 
     def astype(self, dtype) -> "SparseTensor":
         return SparseTensor(self.indices, self.values.astype(dtype),
                             self.valid, self.shape, self.nnz, self.sorted_mode,
-                            _pattern_cache=self._pattern_cache)
+                            self.nnz_rows, _pattern_cache=self._pattern_cache)
 
     def row_buckets(self, mode: int, block_rows: int):
         """Cached CCSR bucket view over ``mode`` (``repro.sparse.ccsr``).
@@ -167,6 +172,14 @@ class SparseTensor:
             self._pattern_cache[key] = pat
         return pat.gather(self)
 
+    def attach_pattern(self, mode: int, block_rows: int, pattern) -> None:
+        """Install an externally built CCSR bucket pattern (ingest-time
+        incremental build, ``repro.sparse.ccsr.IncrementalBucketBuilder``)
+        so later ``row_buckets`` calls skip the host-side build."""
+        if self._pattern_cache is None:
+            object.__setattr__(self, "_pattern_cache", {})
+        self._pattern_cache[(int(mode), int(block_rows))] = pattern
+
     def todense(self) -> jax.Array:
         """Materialize (small tensors / tests only)."""
         out_shape = self.shape if self.dense_dim is None else (*self.shape, self.dense_dim)
@@ -179,8 +192,10 @@ class SparseTensor:
         perm = tuple(perm)
         new_idx = self.indices[:, list(perm)]
         new_shape = tuple(self.shape[p] for p in perm)
+        new_rows = (None if self.nnz_rows is None
+                    else tuple(self.nnz_rows[p] for p in perm))
         return SparseTensor(new_idx, self.values, self.valid, new_shape,
-                            self.nnz, None)
+                            self.nnz, None, new_rows)
 
     def reshape(self, new_shape: Sequence[int]) -> "SparseTensor":
         """Reshape preserving row-major global order (paper Fig. 4 'reshape')."""

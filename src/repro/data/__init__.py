@@ -1,3 +1,3 @@
-from repro.data import synthetic, pipeline
+from repro.data import pipeline, streaming, synthetic
 
-__all__ = ["synthetic", "pipeline"]
+__all__ = ["synthetic", "pipeline", "streaming"]

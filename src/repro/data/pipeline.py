@@ -4,6 +4,13 @@ For completion workloads the dataset is a SparseTensor ingested once:
 shuffle → pad → device_put with nonzeros sharded over the data axes, plus
 ingest-time CCSR bucketing per mode for the Pallas kernels.
 
+Paper-scale tensors never materialize the raw COO: ``CompletionDataset
+.from_stream`` ingests a chunk iterator (``repro.data.streaming``) with
+chunk-wise dedup, deterministic hash-sharding, optional disk spill and an
+incremental bucket-pattern build from streamed occupancy counts — peak
+host memory O(chunk), and the streamed stats feed the planner's nnz/
+nnz_rows hints (DESIGN.md §10).
+
 For LM workloads a host-side iterator yields token batches placed with
 batch-over-data sharding; a one-deep prefetch overlaps host generation with
 device compute (the CPU-container stand-in for a real multi-host input
@@ -23,6 +30,13 @@ from repro.data import synthetic
 from repro.sparse import redistribute
 
 
+def _mesh_shards(mesh: Optional[Mesh], data_axes) -> int:
+    if mesh is None:
+        return 1
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in data_axes]))
+
+
 class CompletionDataset:
     """Ingested, distribution-ready sparse dataset (+ per-mode bucket views).
 
@@ -40,25 +54,93 @@ class CompletionDataset:
     def __init__(self, st: SparseTensor, key, mesh: Optional[Mesh] = None,
                  data_axes=("data",), block_rows: Optional[int] = None,
                  bucket_modes: Optional[Sequence[int]] = None):
-        num_shards = 1
-        if mesh is not None:
-            import numpy as np
-            num_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
-        self.tensor = synthetic.shuffle_and_pad(st, key, num_shards)
-        if mesh is not None:
-            axes = data_axes if len(data_axes) > 1 else data_axes[0]
-            self.tensor = redistribute.shard_nonzeros(self.tensor, mesh, axes)
+        num_shards = _mesh_shards(mesh, data_axes)
+        tensor = synthetic.shuffle_and_pad(st, key, num_shards)
+        self._finish(tensor, mesh, data_axes, block_rows, bucket_modes,
+                     num_shards=num_shards, stats=None)
+
+    # -- streamed construction (DESIGN.md §10) -----------------------------
+    @classmethod
+    def from_stream(cls, chunks, shape, num_shards: Optional[int] = None,
+                    mesh: Optional[Mesh] = None, data_axes=("data",),
+                    block_rows: Optional[int] = None,
+                    bucket_modes: Optional[Sequence[int]] = None,
+                    spool_dir: Optional[str] = None,
+                    test_fraction: float = 0.0) -> "CompletionDataset":
+        """Ingest a chunk stream (``repro.data.streaming``) without ever
+        materializing the raw COO tensor: chunk-wise dedup + hash-sharding
+        + per-shard sort-merge into the canonical shard-block layout, with
+        the per-mode bucket patterns built from streamed occupancy counts.
+        No shuffle pass: the coordinate hash already balances shards (the
+        cyclic-layout argument), and the layout is deterministic — the same
+        stream yields bit-identical entries for any shard count."""
+        from repro.data import streaming
+        if num_shards is None:
+            num_shards = _mesh_shards(mesh, data_axes)
+        elif mesh is not None and num_shards != _mesh_shards(mesh, data_axes):
+            raise ValueError("num_shards conflicts with the mesh data axes")
+        if block_rows is None:
+            from repro.planner.config import default_config
+            block_rows = default_config().block_rows
+        want_buckets = bucket_modes is None or len(tuple(bucket_modes)) > 0
+        train, test, stats = streaming.ingest(
+            chunks, shape, num_shards=num_shards, spool_dir=spool_dir,
+            test_fraction=test_fraction,
+            block_rows=block_rows if want_buckets else None)
+        ds = cls.__new__(cls)
+        ds._finish(train, mesh, data_axes, block_rows, bucket_modes,
+                   num_shards=num_shards, stats=stats)
+        ds.test = test
+        return ds
+
+    def _finish(self, tensor: SparseTensor, mesh, data_axes, block_rows,
+                bucket_modes, num_shards: int = 1, stats=None):
+        self.stats = stats
+        self.test = None
+        self.num_shards = num_shards
         if block_rows is None:
             from repro.planner.config import default_config
             block_rows = default_config().block_rows
         self.block_rows = block_rows
-        modes = range(self.tensor.ndim) if bucket_modes is None else bucket_modes
+        if mesh is not None:
+            axes = data_axes if len(data_axes) > 1 else data_axes[0]
+            tensor = redistribute.shard_nonzeros(tensor, mesh, axes)
+        modes = range(tensor.ndim) if bucket_modes is None else bucket_modes
+        counts = getattr(stats, "bucket_counts", None) if stats else None
+        use_counts = (counts is not None
+                      and stats.bucket_block_rows == block_rows)
         for mode in modes:
-            self.tensor.row_buckets(mode, block_rows)
+            if use_counts:
+                # incremental build: capacity comes from the occupancy
+                # counts streamed at ingest — no extra counting pass
+                from repro.sparse.ccsr import bucket_capacity, bucket_pattern
+                tensor.attach_pattern(
+                    mode, block_rows,
+                    bucket_pattern(tensor, mode, block_rows,
+                                   capacity=bucket_capacity(counts[mode])))
+            else:
+                tensor.row_buckets(mode, block_rows)
+        self.tensor = tensor
         self.omega = self.tensor.with_values(
             jnp.ones_like(self.tensor.values))
         self.mesh = mesh
         self.data_axes = data_axes
+
+    def gather_global(self):
+        """Host-side canonical view of the valid entries — (indices, values)
+        sorted by linearized coordinate. Shard layout and padding cancel
+        out, so two ingest routes over the same logical tensor compare
+        bit-for-bit regardless of shard count (tests/test_streaming.py)."""
+        import numpy as np
+        idx = np.asarray(jax.device_get(self.tensor.indices))
+        vals = np.asarray(jax.device_get(self.tensor.values))
+        valid = np.asarray(jax.device_get(self.tensor.valid))
+        idx, vals = idx[valid], vals[valid]
+        lin = np.zeros(idx.shape[0], np.int64)
+        for d, s in enumerate(self.tensor.shape):
+            lin = lin * np.int64(s) + idx[:, d].astype(np.int64)
+        order = np.argsort(lin, kind="stable")
+        return idx[order], vals[order]
 
 
 def prefetch(it: Iterator, depth: int = 1) -> Iterator:

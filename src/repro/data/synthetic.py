@@ -53,15 +53,52 @@ def _zipf_choice(key, n: int, size: int, a: float = 1.2) -> jax.Array:
 
 
 def netflix_like(key, shape: Tuple[int, int, int] = None, nnz: int = 1_000_000,
-                 cap: Optional[int] = None, zipf_a: float = 1.1) -> SparseTensor:
+                 cap: Optional[int] = None, zipf_a: float = 1.1,
+                 max_rounds: int = 64) -> SparseTensor:
     """Netflix-shaped ratings tensor with popularity skew and low-rank bias
-    structure; values are integer ratings in 1..5."""
+    structure; values are integer ratings in 1..5.
+
+    Zipf sampling emits repeated coordinates with non-negligible probability
+    (popular users × popular movies), which would double-count entries of Ω
+    — the observed set must be a *set*. Coordinates are therefore sampled in
+    rounds (per-round key folding), deduplicated keeping the first stream
+    occurrence, until exactly ``nnz`` unique coordinates exist; the result
+    has exactly ``nnz`` valid entries (regression-pinned in
+    tests/test_streaming.py)."""
     shape = shape or NETFLIX_SHAPE
     i_dim, j_dim, k_dim = shape
+    cells = i_dim * j_dim * k_dim
+    if nnz > cells:
+        raise ValueError(f"nnz={nnz} exceeds the {cells} cells of {shape}")
     ks = jax.random.split(key, 8)
-    ii = _zipf_choice(ks[0], i_dim, nnz, zipf_a)
-    jj = _zipf_choice(ks[1], j_dim, nnz, zipf_a)
-    kk = jax.random.randint(ks[2], (nnz,), 0, k_dim, jnp.int32)
+    seen = np.zeros((0,), np.int64)
+    ii_all = np.zeros((0,), np.int32)
+    jj_all = np.zeros((0,), np.int32)
+    kk_all = np.zeros((0,), np.int32)
+    for rnd in range(max_rounds):
+        need = nnz - ii_all.shape[0]
+        if need <= 0:
+            break
+        # oversample: dedup discards a fraction that grows with density
+        draw = min(max(2 * need, 1024), 8 * nnz)
+        kr = jax.random.fold_in(ks[0], rnd)
+        k1, k2, k3 = jax.random.split(kr, 3)
+        ii = np.asarray(_zipf_choice(k1, i_dim, draw, zipf_a))
+        jj = np.asarray(_zipf_choice(k2, j_dim, draw, zipf_a))
+        kk = np.asarray(jax.random.randint(k3, (draw,), 0, k_dim, jnp.int32))
+        lin = (ii.astype(np.int64) * j_dim + jj) * k_dim + kk
+        # first occurrence within the round, then drop already-seen coords
+        _, first = np.unique(lin, return_index=True)
+        first.sort()
+        fresh = first[~np.isin(lin[first], seen, assume_unique=False)][:need]
+        ii_all = np.concatenate([ii_all, ii[fresh]])
+        jj_all = np.concatenate([jj_all, jj[fresh]])
+        kk_all = np.concatenate([kk_all, kk[fresh]])
+        seen = np.concatenate([seen, lin[fresh]])
+    if ii_all.shape[0] < nnz:
+        raise RuntimeError(f"could not collect {nnz} unique coordinates in "
+                           f"{max_rounds} rounds (density too high?)")
+    ii, jj, kk = jnp.asarray(ii_all), jnp.asarray(jj_all), jnp.asarray(kk_all)
     r = 4
     bu = 0.5 * jax.random.normal(ks[3], (i_dim, r))
     bv = 0.5 * jax.random.normal(ks[4], (j_dim, r))

@@ -170,7 +170,9 @@ def _base_estimate(ir: pir.ContractionIR, path: str) -> PathCost:
     coo_words = m * (n + 1)          # indices + values
 
     if ir.kind == pir.REDUCE:
-        out_words = float(math.prod(shape[d] for d in ir.keep_modes) or 1)
+        # hypersparse output bound: rows actually touched (streamed
+        # nnz_rows hints and the Θ(m) cap), not the full extent product
+        out_words = float(ir.out_cells(ir.keep_modes))
         if path == "segment":
             return PathCost(path, m, coo_words + out_words)
         if path == "dense":
@@ -227,7 +229,7 @@ def _base_estimate(ir: pir.ContractionIR, path: str) -> PathCost:
             return PathCost(path, d * r, d + base_in + others * r)
 
     if ir.kind == pir.MTTKRP:
-        out_words = float(math.prod(shape[d] for d in ir.keep_modes) or 1) * r
+        out_words = float(ir.out_cells(ir.keep_modes)) * r
         base_in = coo_words + _factor_words(ir)
         if path == "all_at_once":
             return PathCost(path, m * r * nf, base_in + m * r + out_words,
@@ -264,7 +266,7 @@ def _base_estimate(ir: pir.ContractionIR, path: str) -> PathCost:
         # nf = non-target factors per half; the contracted-rank half also
         # reads x (counted in _factor_words via factor_modes)
         nf = n - 1
-        out_words = float(shape[ir.keep_modes[0]]) * r
+        out_words = float(ir.out_cells(ir.keep_modes)) * r
         base_in = coo_words + _factor_words(ir)
         if path == "tttp_mttkrp":
             # TTTP then MTTKRP: the Khatri-Rao rows are gathered twice, and

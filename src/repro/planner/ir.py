@@ -85,6 +85,10 @@ class OperandInfo:
     nnz: Optional[int]         # static nonzero hint (sparse only; ≤ cap)
     dtype: str
     dense_dim: Optional[int] = None  # trailing dense axis size (sparse only)
+    # per-mode nonzero-row-count hint from streamed ingest metadata
+    # (data.streaming.IngestStats → SparseTensor.nnz_rows): lets the cost
+    # model bound segment/bucket output traffic hypersparsely
+    nnz_rows: Optional[Tuple[int, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +138,21 @@ class ContractionIR:
     def rank_size(self) -> int:
         return 1 if self.rank_index is None else self.size_of(self.rank_index)
 
+    def out_cells(self, modes: Tuple[int, ...]) -> int:
+        """Hypersparse bound on the kept-mode output cells actually carrying
+        data: the full extent product, tightened by the per-mode
+        nonzero-row hints (streamed ingest metadata) and by nnz (each
+        nonzero lands in exactly one output cell). Dense extents are the
+        fallback when no hint is attached."""
+        sp = self.sparse
+        cells = 1
+        for d in modes:
+            e = sp.shape[d]
+            if sp.nnz_rows is not None:
+                e = min(e, sp.nnz_rows[d])
+            cells *= e
+        return max(1, min(cells, self.nnz) if modes else 1)
+
     @property
     def dense_positions(self) -> Tuple[int, ...]:
         return tuple(i for i, op in enumerate(self.operands)
@@ -142,8 +161,11 @@ class ContractionIR:
 
 def _operand_info(term: str, op) -> OperandInfo:
     if isinstance(op, SparseTensor):
+        nnz_rows = (None if op.nnz_rows is None
+                    else tuple(int(r) for r in op.nnz_rows))
         return OperandInfo(term, True, tuple(op.shape), op.cap, op.nnz,
-                           str(op.values.dtype), op.dense_dim)
+                           str(op.values.dtype), op.dense_dim,
+                           nnz_rows=nnz_rows)
     return OperandInfo(term, False, tuple(op.shape), None, None,
                        str(op.dtype))
 

@@ -67,7 +67,8 @@ def _signature(expr: str, operands: Sequence, path: Optional[str],
     for op in operands:
         if hasattr(op, "cap") and hasattr(op, "indices"):  # SparseTensor
             sig.append(("sparse", tuple(op.shape), op.cap, op.nnz,
-                        str(op.values.dtype), op.dense_dim))
+                        str(op.values.dtype), op.dense_dim,
+                        getattr(op, "nnz_rows", None)))
         else:
             # plans are value-independent, so a degenerate signature for
             # non-array operands (lists/scalars) is harmless

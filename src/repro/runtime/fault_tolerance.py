@@ -58,11 +58,18 @@ class RestartableLoop:
 
     def __init__(self, directory: str, step_fn: Callable[[int, Any], Any],
                  ckpt_every: int = 10, keep_last: int = 3,
-                 watchdog: Optional[StepWatchdog] = None):
+                 watchdog: Optional[StepWatchdog] = None,
+                 metadata_fn: Optional[Callable[[int], dict]] = None):
         self.ckpt = Checkpointer(directory, keep_last)
         self.step_fn = step_fn
         self.ckpt_every = ckpt_every
         self.watchdog = watchdog or StepWatchdog()
+        # metadata_fn(step) -> JSON-able dict stored in the checkpoint
+        # manifest (e.g. the experiment harness's per-sweep metric history);
+        # on resume the newest manifest's metadata lands in last_metadata
+        # BEFORE the first step runs, so callers can rebuild their history
+        self.metadata_fn = metadata_fn
+        self.last_metadata: dict = {}
 
     def _resume(self, init_state):
         """Newest-first restore with corrupted-checkpoint fallback."""
@@ -71,6 +78,7 @@ class RestartableLoop:
             try:
                 state, manifest = restore(self.ckpt.directory, s, init_state)
                 log.info("resumed from step %d", s)
+                self.last_metadata = manifest.get("metadata", {}) or {}
                 return s + 1, state
             except Exception as e:  # corrupt/partial: fall back
                 log.warning("checkpoint step %d unreadable (%s); falling back",
@@ -85,13 +93,20 @@ class RestartableLoop:
             jax.block_until_ready(jax.tree.leaves(state)[0])
             self.watchdog.observe(time.perf_counter() - t0, step)
             if (step + 1) % self.ckpt_every == 0:
-                self.ckpt.save_async(step, state)
+                self.ckpt.save_async(step, state, self._metadata(step))
             if fail_at is not None and step == fail_at:
                 self.ckpt.wait()
                 raise RuntimeError(f"injected failure at step {step}")
         self.ckpt.wait()
         final = num_steps - 1
-        if final >= 0:
+        if final >= 0 and start <= final:
+            # skip the final re-save when the resume point was already past
+            # the end: no step ran, and re-writing would clobber the stored
+            # manifest metadata with this process's (empty) metadata_fn view
             from repro.checkpoint.checkpointer import save
-            save(self.ckpt.directory, final, state)
+            save(self.ckpt.directory, final, state,
+                 metadata=self._metadata(final))
         return state
+
+    def _metadata(self, step: int) -> Optional[dict]:
+        return None if self.metadata_fn is None else self.metadata_fn(step)

@@ -179,8 +179,12 @@ def bucket_pattern(st: SparseTensor, mode: int, block_rows: int,
     idx = idx[keep]
     nnz = idx.shape[0]
     rows = idx[:, mode]
-    order = np.argsort(rows, kind="stable")
-    idx, rows, orig = idx[order], rows[order], orig[order]
+    if st.sorted_mode != mode:
+        order = np.argsort(rows, kind="stable")
+        idx, rows, orig = idx[order], rows[order], orig[order]
+    # else: entries already non-decreasing in this mode (streamed canonical
+    # layouts are sorted by linearized coordinate ⇒ by mode 0) — a stable
+    # argsort would be the identity, so skip it
     num_rows = st.shape[mode]
     nb = cdiv(num_rows, block_rows)
     bucket = rows // block_rows
@@ -202,6 +206,48 @@ def bucket_pattern(st: SparseTensor, mode: int, block_rows: int,
     return BucketPattern(jnp.asarray(bsel), jnp.asarray(bidx),
                          jnp.asarray(blocal), jnp.asarray(bvalid),
                          mode, block_rows, st.shape, st.cap)
+
+
+def bucket_capacity(counts: np.ndarray, capacity_multiple: int = 8) -> int:
+    """Bucket capacity from an occupancy-count array (streamed counts are
+    over-estimates under cross-chunk duplicates — a safe padded bound)."""
+    return round_up(max(int(np.max(counts, initial=1)), 1), capacity_multiple)
+
+
+class IncrementalBucketBuilder:
+    """Incremental CCSR bucket-pattern construction at ingest time.
+
+    The streaming pipeline (``repro.data.streaming``) cannot afford a
+    whole-tensor counting pass per mode once chunks have been spilled:
+    instead this builder ``observe``s each (deduped) chunk's indices as it
+    streams by, accumulating per-mode bucket occupancy counts in
+    O(Σ I_d / block_rows) host memory. At finalize, :meth:`build` hands
+    :func:`bucket_pattern` the capacity derived from the streamed counts,
+    so the pattern build needs no extra occupancy scan. Cross-chunk
+    duplicates (removed later, at shard merge) can only make the streamed
+    counts an over-estimate — a safe (slightly padded) capacity."""
+
+    def __init__(self, shape, block_rows: int):
+        self.shape = tuple(int(s) for s in shape)
+        self.block_rows = int(block_rows)
+        self.counts = [np.zeros(cdiv(s, block_rows), np.int64)
+                       for s in self.shape]
+
+    def observe(self, indices: np.ndarray) -> None:
+        """Accumulate bucket occupancy for one chunk's (n, ndim) indices."""
+        for d in range(len(self.shape)):
+            b = indices[:, d] // self.block_rows
+            self.counts[d] += np.bincount(b, minlength=self.counts[d].shape[0]
+                                          ).astype(np.int64)
+
+    def capacity(self, mode: int, capacity_multiple: int = 8) -> int:
+        return bucket_capacity(self.counts[mode], capacity_multiple)
+
+    def build(self, st: SparseTensor, mode: int) -> BucketPattern:
+        """Pattern for ``st`` (the finalized tensor sharing the observed Ω)
+        with the streamed capacity bound."""
+        return bucket_pattern(st, mode, self.block_rows,
+                              capacity=self.capacity(mode))
 
 
 def bucketize(st: SparseTensor, mode: int, block_rows: int,

@@ -30,7 +30,7 @@ def shard_nonzeros(st: SparseTensor, mesh: Mesh, axes) -> SparseTensor:
     return SparseTensor(jax.device_put(st.indices, sharding_idx),
                         jax.device_put(st.values, sharding_val),
                         jax.device_put(st.valid, sharding_1d),
-                        st.shape, st.nnz, st.sorted_mode)
+                        st.shape, st.nnz, st.sorted_mode, st.nnz_rows)
 
 
 def replicate(x: jax.Array, mesh: Mesh) -> jax.Array:

@@ -1,0 +1,82 @@
+"""Regenerate the golden kernel-regression fixtures.
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+
+Each .npz holds a tiny deterministic padded-COO tensor (indices / values /
+valid / shape), factor matrices, a CG direction, and float64 *reference*
+outputs for MTTKRP (every mode), TTTP and the weighted Gram matvec
+(cg_matvec), computed here with plain numpy in double precision — NO repro
+kernel is involved in producing the expectations, so a silent numeric drift
+in any kernel or planner path fails tests/test_golden.py loudly.
+
+Only rerun this script when the fixture *definition* changes; the checked-in
+files are the regression baseline.
+"""
+import os
+
+import numpy as np
+
+OUT_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _reference_outputs(idx, vals, valid, shape, factors, x):
+    """Float64 references: per-entry Khatri-Rao accumulation (duplicate
+    coordinates each contribute — matching COO kernel semantics)."""
+    nd = len(shape)
+    r = factors[0].shape[1]
+    v = np.where(valid, vals, 0.0).astype(np.float64)
+    fs64 = [f.astype(np.float64) for f in factors]
+    out = {}
+    # MTTKRP onto every mode
+    for mode in range(nd):
+        kr = np.ones((idx.shape[0], r))
+        for d in range(nd):
+            if d != mode:
+                kr = kr * fs64[d][idx[:, d]]
+        acc = np.zeros((shape[mode], r))
+        np.add.at(acc, idx[:, mode], v[:, None] * kr)
+        out[f"mttkrp_m{mode}"] = acc
+    # TTTP values (all modes covered)
+    kr = np.ones((idx.shape[0], r))
+    for d in range(nd):
+        kr = kr * fs64[d][idx[:, d]]
+    out["tttp_vals"] = v * kr.sum(axis=1)
+    # weighted Gram matvec onto mode 0 (paper eq. 3): weights are `vals`,
+    # the contracted-rank side uses x on mode 0 and the factors elsewhere
+    x64 = x.astype(np.float64)
+    inner = x64[idx[:, 0]]
+    for d in range(1, nd):
+        inner = inner * fs64[d][idx[:, d]]
+    z = v * inner.sum(axis=1)                       # TTTP half
+    kr0 = np.ones((idx.shape[0], r))
+    for d in range(1, nd):
+        kr0 = kr0 * fs64[d][idx[:, d]]
+    acc = np.zeros((shape[0], r))
+    np.add.at(acc, idx[:, 0], z[:, None] * kr0)     # MTTKRP half
+    out["cg_m0"] = acc
+    return out
+
+
+def make_case(name: str, shape, nnz: int, cap: int, r: int, seed: int):
+    rng = np.random.default_rng(seed)
+    nd = len(shape)
+    idx = np.zeros((cap, nd), np.int32)
+    for d, s in enumerate(shape):
+        idx[:nnz, d] = rng.integers(0, s, size=nnz)
+    vals = np.zeros((cap,), np.float32)
+    vals[:nnz] = rng.uniform(-1.0, 1.0, size=nnz).astype(np.float32)
+    valid = np.zeros((cap,), bool)
+    valid[:nnz] = True
+    factors = [rng.standard_normal((s, r)).astype(np.float32) for s in shape]
+    x = rng.standard_normal((shape[0], r)).astype(np.float32)
+    ref = _reference_outputs(idx, vals, valid, shape, factors, x)
+    path = os.path.join(OUT_DIR, f"{name}.npz")
+    np.savez(path, indices=idx, values=vals, valid=valid,
+             shape=np.asarray(shape, np.int64),
+             x=x, **{f"factor_{d}": f for d, f in enumerate(factors)}, **ref)
+    print(f"wrote {path}: shape={shape} nnz={nnz} cap={cap} r={r}")
+
+
+if __name__ == "__main__":
+    make_case("golden_o3", (17, 13, 9), nnz=80, cap=88, r=6, seed=1234)
+    make_case("golden_o4", (9, 8, 7, 6), nnz=60, cap=64, r=4, seed=5678)

@@ -1,0 +1,95 @@
+"""Experiment harness (launch/experiment.py): JSON metrics structure,
+held-out RMSE improvement, and metric-history resume through the
+RestartableLoop checkpoint manifest."""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.launch.experiment import SPECS, ExperimentSpec, run_experiment
+
+TINY = ExperimentSpec(
+    "tiny-test", "netflix", (40, 30, 10), nnz=5_000, chunk_size=1_500,
+    rank=4, sweeps=5, test_fraction=0.15, lam=1e-4, seed=0)
+
+
+def test_known_specs_cover_paper_scales():
+    assert {"netflix-ci", "netflix-small", "function-small",
+            "paper-netflix", "paper-function"} <= set(SPECS)
+    assert SPECS["paper-function"].nnz == 10_000_000_000
+    assert SPECS["paper-netflix"].nnz == 100_477_727
+    for s in SPECS.values():
+        assert set(s.algorithms) <= {"als", "ccd", "sgd", "ggn", "gcp"}
+
+
+def test_run_experiment_json_and_heldout_rmse_improves(tmp_path):
+    report = run_experiment(
+        TINY, out_dir=str(tmp_path),
+        algorithms=("als", "ggn"), losses=("quadratic",))
+    out = tmp_path / "experiment_tiny-test.json"
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk["ingest"]["nnz"] == report["ingest"]["nnz"] > 0
+    assert on_disk["ingest"]["nnz_rows"] == [40, 30, 10]
+    assert len(on_disk["runs"]) == 2
+    for run in on_disk["runs"]:
+        sweeps = run["sweeps"]
+        assert len(sweeps) == TINY.sweeps
+        for e in sweeps:
+            assert {"sweep", "seconds", "objective", "rmse_train",
+                    "rmse_test", "poisson_deviance_test"} <= set(e)
+        rmses = [e["rmse_test"] for e in sweeps]
+        # held-out RMSE improves monotonically (small tolerance for the
+        # final-sweep overfitting wiggle) and substantially overall
+        for a, b in zip(rmses, rmses[1:]):
+            assert b <= a * 1.05 + 1e-6, (run["algorithm"], rmses)
+        assert rmses[-1] < 0.8 * rmses[0], (run["algorithm"], rmses)
+        assert run["final"] == sweeps[-1]
+        assert run["update_loss"] == "quadratic"
+
+
+def test_quadratic_solvers_report_surrogate_under_poisson(tmp_path):
+    report = run_experiment(
+        dataclasses.replace(TINY, sweeps=2), out_dir=str(tmp_path),
+        algorithms=("ccd",), losses=("poisson_log",))
+    (run,) = report["runs"]
+    assert run["loss"] == "poisson_log"
+    assert run["update_loss"] == "quadratic"   # Fig.-8 comparison semantics
+    assert run["link"] == "identity"
+    assert run["sweeps"][-1]["rmse_test"] < run["sweeps"][0]["rmse_test"]
+
+
+def test_experiment_resumes_metrics_from_manifest(tmp_path):
+    """Kill the loop mid-run; the rerun resumes from the checkpoint AND
+    rebuilds the earlier sweeps' metrics from the manifest metadata."""
+    spec = dataclasses.replace(TINY, sweeps=7)
+    ckpt_root = str(tmp_path / "ckpt")
+    import repro.runtime.fault_tolerance as ft
+    orig_run = ft.RestartableLoop.run
+
+    def failing_run(self, init_state, num_steps, fail_at=None):
+        return orig_run(self, init_state, num_steps, fail_at=4)
+
+    ft.RestartableLoop.run = failing_run
+    try:
+        with pytest.raises(RuntimeError, match="injected failure"):
+            run_experiment(spec, out_dir=str(tmp_path), ckpt_root=ckpt_root,
+                           algorithms=("als",), losses=("quadratic",))
+    finally:
+        ft.RestartableLoop.run = orig_run
+    report = run_experiment(spec, out_dir=str(tmp_path), ckpt_root=ckpt_root,
+                            algorithms=("als",), losses=("quadratic",))
+    (run,) = report["runs"]
+    # sweeps 0..4 ran pre-failure (checkpointed at 4), 5..6 post-resume;
+    # the manifest metadata restored the full per-sweep history
+    assert [e["sweep"] for e in run["sweeps"]] == list(range(7))
+    # re-running the COMPLETED experiment runs zero sweeps but must not
+    # clobber the checkpointed history — the report rebuilds from the
+    # manifest (regression: the final re-save used to wipe it)
+    report2 = run_experiment(spec, out_dir=str(tmp_path),
+                             ckpt_root=ckpt_root, algorithms=("als",),
+                             losses=("quadratic",))
+    (run2,) = report2["runs"]
+    assert [e["sweep"] for e in run2["sweeps"]] == list(range(7))
+    assert run2["sweeps"][:5] == run["sweeps"][:5]

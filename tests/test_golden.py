@@ -1,0 +1,112 @@
+"""Golden kernel-regression fixtures: checked-in float64 reference outputs
+for MTTKRP / TTTP / cg_matvec on tiny serialized COO tensors
+(tests/golden/*.npz, regenerated only by tests/golden/make_golden.py).
+
+Every kernel route — the direct ops, the bucketed Pallas-backed views and
+every planner candidate path — must reproduce the stored references to
+GOLDEN_TOL, so silent numeric drift anywhere in the kernel stack fails
+loudly instead of degrading convergence quietly."""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import planner
+from repro.core.sparse_tensor import SparseTensor
+from repro.kernels import ops as kops
+from repro.sparse import ops as sops
+from repro.sparse.ccsr import bucketize
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_FILES = sorted(glob.glob(os.path.join(GOLDEN_DIR, "golden_*.npz")))
+GOLDEN_TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _load(path):
+    z = np.load(path)
+    shape = tuple(int(s) for s in z["shape"])
+    st = SparseTensor(jnp.asarray(z["indices"]), jnp.asarray(z["values"]),
+                      jnp.asarray(z["valid"]), shape,
+                      nnz=int(z["valid"].sum()))
+    factors = [jnp.asarray(z[f"factor_{d}"]) for d in range(len(shape))]
+    return z, st, factors
+
+
+def _ids(paths):
+    return [os.path.splitext(os.path.basename(p))[0] for p in paths]
+
+
+def test_fixtures_exist():
+    assert GOLDEN_FILES, f"no golden fixtures under {GOLDEN_DIR}"
+
+
+@pytest.mark.parametrize("path", GOLDEN_FILES, ids=_ids(GOLDEN_FILES))
+def test_golden_mttkrp_all_modes_all_paths(path):
+    z, st, factors = _load(path)
+    for mode in range(st.ndim):
+        want = z[f"mttkrp_m{mode}"]
+        fs = [None if d == mode else factors[d] for d in range(st.ndim)]
+        np.testing.assert_allclose(sops.mttkrp(st, fs, mode), want,
+                                   err_msg=f"direct mttkrp mode {mode}",
+                                   **GOLDEN_TOL)
+        buckets = bucketize(st, mode, block_rows=8)
+        np.testing.assert_allclose(
+            kops.mttkrp_bucketed(buckets, fs, num_rows=st.shape[mode]), want,
+            err_msg=f"bucketed mttkrp mode {mode}", **GOLDEN_TOL)
+        plan = planner.plan_contraction(
+            *_mttkrp_call(st, factors, mode))
+        for p in plan.candidates:
+            got = planner.planned_mttkrp(st, fs, mode, path=p)
+            np.testing.assert_allclose(
+                got, want, err_msg=f"mttkrp mode {mode} path {p}",
+                **GOLDEN_TOL)
+
+
+def _mttkrp_call(st, factors, mode):
+    letters = "abcdefghij"
+    s_term = letters[:st.ndim]
+    others = [d for d in range(st.ndim) if d != mode]
+    expr = ",".join([s_term] + [s_term[d] + "z" for d in others]) \
+        + "->" + s_term[mode] + "z"
+    return expr, (st, *[factors[d] for d in others])
+
+
+@pytest.mark.parametrize("path", GOLDEN_FILES, ids=_ids(GOLDEN_FILES))
+def test_golden_tttp_all_paths(path):
+    z, st, factors = _load(path)
+    want = z["tttp_vals"]
+    np.testing.assert_allclose(kops.tttp_values(st, factors), want,
+                               err_msg="kernels.ops.tttp", **GOLDEN_TOL)
+    letters = "abcdefghij"
+    s_term = letters[:st.ndim]
+    expr = ",".join([s_term] + [s_term[d] + "z" for d in range(st.ndim)]) \
+        + "->" + s_term
+    plan = planner.plan_contraction(expr, (st, *factors))
+    for p in plan.candidates:
+        got = planner.planned_tttp(st, factors, path=p)
+        np.testing.assert_allclose(got.values, want,
+                                   err_msg=f"tttp path {p}", **GOLDEN_TOL)
+
+
+@pytest.mark.parametrize("path", GOLDEN_FILES, ids=_ids(GOLDEN_FILES))
+def test_golden_cg_matvec_all_paths(path):
+    z, st, factors = _load(path)
+    want = z["cg_m0"]
+    x = jnp.asarray(z["x"])
+    got_default = planner.planned_cg_matvec(st, factors, 0, x)
+    np.testing.assert_allclose(got_default, want,
+                               err_msg="planned_cg_matvec default",
+                               **GOLDEN_TOL)
+    for p in ("fused", "tttp_mttkrp", "sliced", "dense"):
+        got = planner.planned_cg_matvec(st, factors, 0, x, path=p)
+        np.testing.assert_allclose(got, want,
+                                   err_msg=f"cg_matvec path {p}", **GOLDEN_TOL)
+    # the raw fused bucketed kernel (ingest-time view)
+    buckets = st.row_buckets(0, block_rows=8)
+    fs = [None, *factors[1:]]
+    got = kops.cg_matvec_bucketed(buckets, fs, x, num_rows=st.shape[0])
+    np.testing.assert_allclose(got, want, err_msg="cg_matvec_bucketed",
+                               **GOLDEN_TOL)

@@ -1,0 +1,183 @@
+"""Randomized planner-path equivalence: every candidate path of a random
+order-3/4 contraction IR must match the dense einsum reference in VALUES and
+GRADIENTS to 1e-4.
+
+This module is hypothesis-free (a fixed deterministic seed grid) so the
+sweep always runs in tier-1; ``tests/test_properties.py`` wraps the same
+helpers under hypothesis for fuzzing in CI, where the package is installed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.api as ctf
+from repro.core.sparse_tensor import SparseTensor
+
+KINDS = ("mttkrp", "partial_mttkrp", "tttp", "ttm", "reduce", "cg_matvec")
+_LETTERS = "ijklmn"
+
+
+def random_ir_case(kind: str, order: int, seed: int, r: int = 4):
+    """Build (expr, operands) for a random IR of the given family/order."""
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(4, 10)) for _ in range(order))
+    nnz = int(rng.integers(10, 50))
+    key = jax.random.PRNGKey(seed)
+    # unique coordinates: duplicate entries are linear-equivalent but make
+    # the squared-output gradient functional ambiguous between the
+    # per-entry kernels and the densified reference
+    cells = int(np.prod(shape))
+    lin = rng.choice(cells, size=min(nnz, cells), replace=False)
+    idx = np.zeros((lin.shape[0], order), np.int64)
+    rem = lin
+    for d in range(order - 1, -1, -1):
+        idx[:, d] = rem % shape[d]
+        rem = rem // shape[d]
+    vals = jax.random.uniform(key, (lin.shape[0],), minval=-1.0, maxval=1.0)
+    st = SparseTensor.from_coo(idx, vals, shape,
+                               cap=lin.shape[0] + int(rng.integers(0, 8)))
+    s_term = _LETTERS[:order]
+
+    def factor(d, rank, salt):
+        return jax.random.normal(jax.random.fold_in(key, 100 + salt),
+                                 (shape[d], rank))
+
+    if kind == "mttkrp":
+        mode = int(rng.integers(0, order))
+        others = [d for d in range(order) if d != mode]
+        out = s_term[mode] + "z"
+        if rng.integers(0, 2):                      # permuted output
+            out = out[::-1]
+        terms = [s_term] + [s_term[d] + "z" for d in others]
+        ops = (st, *[factor(d, r, d) for d in others])
+    elif kind == "partial_mttkrp":
+        contracted = sorted(rng.choice(order, size=max(order - 2, 1),
+                                       replace=False).tolist())
+        kept = [d for d in range(order) if d not in contracted]
+        kept_perm = list(rng.permutation(kept))
+        out = "".join(s_term[d] for d in kept_perm) + "z"
+        terms = [s_term] + [s_term[d] + "z" for d in contracted]
+        ops = (st, *[factor(d, r, d) for d in contracted])
+    elif kind == "tttp":
+        covered = sorted(rng.choice(order, size=int(rng.integers(1, order + 1)),
+                                    replace=False).tolist())
+        out = s_term
+        terms = [s_term] + [s_term[d] + "z" for d in covered]
+        ops = (st, *[factor(d, r, d) for d in covered])
+    elif kind == "ttm":
+        mode = int(rng.integers(0, order))
+        kept = [d for d in range(order) if d != mode]
+        kept_perm = list(rng.permutation(kept))
+        out = "".join(s_term[d] for d in kept_perm) + "z"
+        terms = [s_term, s_term[mode] + "z"]
+        ops = (st, factor(mode, r, mode))
+    elif kind == "reduce":
+        k = int(rng.integers(0, order))
+        kept = list(rng.permutation(rng.choice(order, size=k, replace=False)))
+        out = "".join(s_term[d] for d in kept)
+        terms = [s_term]
+        ops = (st,)
+    elif kind == "cg_matvec":
+        mode = int(rng.integers(0, order))
+        others = [d for d in range(order) if d != mode]
+        terms = ([s_term]
+                 + [s_term[d] + "z" for d in others]
+                 + [s_term[mode] + "y"]
+                 + [s_term[d] + "y" for d in others])
+        out = s_term[mode] + "z"
+        fs = {d: factor(d, r, d) for d in others}
+        x = factor(mode, r, 50 + mode)
+        ops = (st, *[fs[d] for d in others], x, *[fs[d] for d in others])
+    else:
+        raise ValueError(kind)
+    return ",".join(terms) + "->" + out, ops
+
+
+def _as_dense_args(expr, ops):
+    return [op.todense() if isinstance(op, SparseTensor) else op
+            for op in ops]
+
+
+def check_all_paths_match_dense(expr, ops, rtol=1e-4, atol=1e-4):
+    """Values: every candidate path == jnp.einsum on the densified operands."""
+    want = jnp.einsum(expr, *_as_dense_args(expr, ops))
+    plan = ctf.plan(expr, *ops)
+    assert plan.candidates, expr
+    for path in plan.candidates:
+        got = ctf.einsum(expr, *ops, path=path)
+        if isinstance(got, SparseTensor):
+            got = got.todense()
+        np.testing.assert_allclose(got, want, rtol=rtol, atol=atol,
+                                   err_msg=f"{expr} via {path}")
+
+
+def check_all_paths_grads_match_dense(expr, ops, rtol=1e-4, atol=1e-4):
+    """Gradients w.r.t. every dense operand (and the sparse values) match
+    the dense reference for every candidate path."""
+    st = next(op for op in ops if isinstance(op, SparseTensor))
+    dense_ops = tuple(op for op in ops if not isinstance(op, SparseTensor))
+    lhs, out_term = expr.replace(" ", "").split("->")
+    sparse_out = out_term == lhs.split(",")[0]      # TTTP: output == Ω
+
+    def _rebuild(cur, dense):
+        rebuilt, di = [], 0
+        for op in ops:
+            if isinstance(op, SparseTensor):
+                rebuilt.append(cur)
+            else:
+                rebuilt.append(dense[di])
+                di += 1
+        return rebuilt
+
+    def run(path):
+        def f(vals, dense):
+            cur = st.with_values(vals)
+            out = ctf.einsum(expr, *_rebuild(cur, dense), path=path)
+            if isinstance(out, SparseTensor):
+                return jnp.sum(out.masked_values() ** 2)
+            return jnp.sum(out ** 2)
+        return jax.grad(f, argnums=(0, 1))(st.values, dense_ops)
+
+    def run_dense():
+        def f(vals, dense):
+            cur = st.with_values(vals)
+            rebuilt = [op.todense() if isinstance(op, SparseTensor) else op
+                       for op in _rebuild(cur, dense)]
+            out = jnp.einsum(expr, *rebuilt)
+            if sparse_out:                          # TTTP family: re-sample
+                out = out[tuple(st.indices[:, d] for d in range(st.ndim))]
+                out = jnp.where(st.mask, out, 0.0)
+            return jnp.sum(out ** 2)
+        return jax.grad(f, argnums=(0, 1))(st.values, dense_ops)
+
+    want_v, want_f = run_dense()
+    plan = ctf.plan(expr, *ops)
+    for path in plan.candidates:
+        got_v, got_f = run(path)
+        for g, w, label in [(got_v, want_v, "values"),
+                            *[(g, w, f"dense[{i}]") for i, (g, w)
+                              in enumerate(zip(got_f, want_f))]]:
+            np.testing.assert_allclose(
+                g, w, rtol=rtol, atol=atol,
+                err_msg=f"grad({label}) {expr} via {path}")
+
+
+SEEDS = (11, 29, 47)
+CASES = [(k, o, s) for k in KINDS for o in (3, 4) for s in SEEDS]
+
+
+@pytest.mark.parametrize("kind,order,seed", CASES,
+                         ids=[f"{k}-o{o}-s{s}" for k, o, s in CASES])
+def test_random_ir_every_path_matches_dense(kind, order, seed):
+    expr, ops = random_ir_case(kind, order, seed)
+    check_all_paths_match_dense(expr, ops)
+
+
+@pytest.mark.parametrize("kind,order,seed",
+                         [(k, o, s) for k, o, s in CASES if s == SEEDS[0]],
+                         ids=[f"{k}-o{o}-s{s}" for k, o, s in CASES
+                              if s == SEEDS[0]])
+def test_random_ir_every_path_grads_match_dense(kind, order, seed):
+    expr, ops = random_ir_case(kind, order, seed)
+    check_all_paths_grads_match_dense(expr, ops)

@@ -141,6 +141,33 @@ def test_union_add_commutes(shape, n1, n2, seed):
     np.testing.assert_allclose(ab, ba, rtol=1e-6, atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# planner candidate-path equivalence on random order-3/4 IRs (values AND
+# gradients vs the dense reference) — the deterministic seed-grid variant
+# always runs in tests/test_planner_properties.py; under hypothesis the
+# same helpers fuzz over the whole (family, order, seed) space.
+# ---------------------------------------------------------------------------
+from test_planner_properties import (KINDS, check_all_paths_grads_match_dense,
+                                     check_all_paths_match_dense,
+                                     random_ir_case)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st_.sampled_from(KINDS), st_.sampled_from((3, 4)),
+       st_.integers(0, 2 ** 31))
+def test_random_ir_paths_match_dense_fuzzed(kind, order, seed):
+    expr, ops = random_ir_case(kind, order, seed % (2 ** 31))
+    check_all_paths_match_dense(expr, ops)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st_.sampled_from(KINDS), st_.sampled_from((3, 4)),
+       st_.integers(0, 2 ** 31))
+def test_random_ir_path_grads_match_dense_fuzzed(kind, order, seed):
+    expr, ops = random_ir_case(kind, order, seed % (2 ** 31))
+    check_all_paths_grads_match_dense(expr, ops)
+
+
 @given(dims, st_.integers(10, 60), st_.integers(1, 6), st_.integers(2, 4),
        st_.integers(0, 2 ** 31))
 def test_h_sliced_tttp_invariant(shape, nnz, r_per, h, seed):
