@@ -1,0 +1,185 @@
+"""Perf regression gate: a fresh ``benchmarks.run --json`` output directory
+vs the ``BENCH_*.json`` baselines committed at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline . --current bench-json --tolerance 1.2
+
+Exits nonzero when any benchmarked kernel in the current run is slower
+than its committed baseline by more than the configured tolerance
+(default 1.2 = a >20% slowdown fails the build). Policy details:
+
+* entries are compared by (group, name) intersection — a renamed or newly
+  added benchmark never fails the gate (it is reported as unmatched so the
+  baseline can be refreshed deliberately);
+* timings below ``--min-us`` are skipped: at tens of microseconds the
+  dispatch jitter on shared CI runners swamps any real signal;
+* negative timings are sentinels (``-1`` = OOM-budget skip) and ignored;
+* ``--normalize median`` divides every ratio by the median ratio across
+  all compared entries before applying the tolerance. A uniformly slower
+  machine (different CI runner class, thermal throttling) shifts ALL
+  ratios equally and still passes; a single regressed kernel sticks out
+  against the fleet. This is the recommended mode for cross-machine
+  gating; the default (``none``) is a strict absolute ratio.
+* ``--current`` accepts SEVERAL directories and gates on the per-entry
+  minimum across them. Timing noise on shared runners is one-sided (other
+  tenants only ever slow you down), so best-of-N runs is the standard
+  variance killer — two or three ``benchmarks.run`` invocations tighten a
+  ~1.5x single-run spread to a few percent. Committed baselines should be
+  produced the same way (``--update`` min-merges too).
+* ``--update`` rewrites the baseline files from the (min-merged) current
+  run(s) instead of gating — the one-command way to advance the committed
+  trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+
+def load_groups(dir_: str) -> Dict[str, Dict[str, float]]:
+    """{group: {name: us_per_call}} from every BENCH_*.json in ``dir_``."""
+    out: Dict[str, Dict[str, float]] = {}
+    for path in sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))):
+        group = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                out[group] = {str(k): float(v)
+                              for k, v in json.load(f).items()}
+        except (OSError, ValueError) as e:
+            print(f"warning: unreadable {path}: {e}", file=sys.stderr)
+    return out
+
+
+def min_merge(dirs: List[str]) -> Dict[str, Dict[str, float]]:
+    """Best-of-N across run directories: per-entry minimum (sentinels <= 0
+    win only when every run agrees the entry was skipped)."""
+    merged: Dict[str, Dict[str, float]] = {}
+    for d in dirs:
+        for group, entries in load_groups(d).items():
+            g = merged.setdefault(group, {})
+            for name, v in entries.items():
+                old = g.get(name)
+                if old is None or old <= 0 or (0 < v < old):
+                    g[name] = v
+    return merged
+
+
+def compare(baseline: Dict[str, Dict[str, float]],
+            current: Dict[str, Dict[str, float]],
+            tolerance: float = 1.2, min_us: float = 50.0,
+            normalize: str = "none") -> Tuple[List[dict], List[str]]:
+    """Returns ``(rows, regressions)``: every compared entry with its ratio,
+    and the formatted failures. Only groups present in BOTH sides gate."""
+    rows: List[dict] = []
+    for group in sorted(set(baseline) & set(current)):
+        base, cur = baseline[group], current[group]
+        for name in sorted(set(base) & set(cur)):
+            b, c = base[name], cur[name]
+            if b <= 0 or c <= 0:          # sentinel (-1 = skipped/OOM)
+                continue
+            skip = b < min_us and c < min_us
+            rows.append({"group": group, "name": name, "baseline_us": b,
+                         "current_us": c, "ratio": c / b, "skipped": skip})
+    gated = [r for r in rows if not r["skipped"]]
+    if normalize == "median" and gated:
+        ratios = sorted(r["ratio"] for r in gated)
+        med = ratios[len(ratios) // 2]
+        for r in rows:
+            r["median_ratio"] = med
+            r["normalized_ratio"] = r["ratio"] / med if med > 0 else r["ratio"]
+    regressions = []
+    for r in rows:
+        if r["skipped"]:
+            continue
+        eff = r.get("normalized_ratio", r["ratio"])
+        if eff > tolerance:
+            regressions.append(
+                f"{r['group']}/{r['name']}: {r['baseline_us']:.1f}us -> "
+                f"{r['current_us']:.1f}us (x{r['ratio']:.2f}"
+                + (f", normalized x{eff:.2f}" if "normalized_ratio" in r
+                   else "") + f" > {tolerance:.2f})")
+    return rows, regressions
+
+
+def report_unmatched(baseline, current) -> List[str]:
+    notes = []
+    for group in sorted(set(baseline) ^ set(current)):
+        side = "baseline" if group in baseline else "current"
+        notes.append(f"group {group!r} only in {side}")
+    for group in sorted(set(baseline) & set(current)):
+        for name in sorted(set(baseline[group]) ^ set(current[group])):
+            side = "baseline" if name in baseline[group] else "current"
+            notes.append(f"{group}/{name} only in {side}")
+    return notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="gate a fresh benchmark run against committed baselines")
+    ap.add_argument("--baseline", default=".", metavar="DIR",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current", required=True, metavar="DIR", nargs="+",
+                    help="director(ies) holding fresh BENCH_*.json runs; "
+                         "several dirs gate on the per-entry best-of-N")
+    ap.add_argument("--tolerance", type=float, default=1.2,
+                    help="max allowed current/baseline ratio (1.2 = +20%%)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore entries where both sides are faster than "
+                         "this (dispatch jitter floor)")
+    ap.add_argument("--normalize", choices=["none", "median"], default="none",
+                    help="'median' normalizes out a uniform machine-speed "
+                         "shift before gating (cross-runner mode)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the current BENCH_*.json over the baselines "
+                         "instead of gating")
+    args = ap.parse_args()
+
+    if args.update:
+        merged = min_merge(args.current)
+        for group, entries in sorted(merged.items()):
+            path = os.path.join(args.baseline, f"BENCH_{group}.json")
+            with open(path, "w") as f:
+                json.dump(entries, f, indent=2, sort_keys=True)
+        print(f"updated {len(merged)} baseline file(s) in {args.baseline}")
+        return
+
+    baseline = load_groups(args.baseline)
+    current = min_merge(args.current)
+    if not baseline:
+        raise SystemExit(f"no BENCH_*.json baselines in {args.baseline!r}")
+    if not current:
+        raise SystemExit(f"no BENCH_*.json results in {args.current!r}")
+
+    rows, regressions = compare(baseline, current, args.tolerance,
+                                args.min_us, args.normalize)
+    print(f"{'group':14s} {'name':44s} {'base_us':>10s} {'cur_us':>10s} "
+          f"{'ratio':>7s}")
+    for r in rows:
+        eff = r.get("normalized_ratio", r["ratio"])
+        flag = ("  [skip<min-us]" if r["skipped"] else
+                "  <-- REGRESSION" if eff > args.tolerance else "")
+        print(f"{r['group']:14s} {r['name']:44s} {r['baseline_us']:10.1f} "
+              f"{r['current_us']:10.1f} {r['ratio']:7.2f}{flag}")
+    for note in report_unmatched(baseline, current):
+        print(f"note: {note}")
+    if args.normalize == "median" and rows:
+        print(f"median ratio (machine-speed normalizer): "
+              f"{rows[0].get('median_ratio', 1.0):.2f}")
+    if not rows:
+        print("warning: no comparable entries between baseline and current")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond tolerance "
+              f"x{args.tolerance:.2f}:")
+        for line in regressions:
+            print("  " + line)
+        sys.exit(1)
+    print(f"\nOK: {sum(not r['skipped'] for r in rows)} entries within "
+          f"tolerance x{args.tolerance:.2f}")
+
+
+if __name__ == "__main__":
+    main()

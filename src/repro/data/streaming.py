@@ -34,10 +34,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Callable, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.utils import round_up
 
 # ---------------------------------------------------------------------------
@@ -240,6 +242,12 @@ class IngestStats:
     # pattern builds then need no extra counting pass
     bucket_block_rows: Optional[int] = None
     bucket_counts: Optional[Tuple[np.ndarray, ...]] = None
+    # ingest telemetry (DESIGN.md §11), set at finalize; mirrored into the
+    # obs registry (ingest/* gauges) when tracing is enabled
+    ingest_seconds: float = 0.0      # busy time inside add()+finalize
+    mnnz_per_s: float = 0.0          # entries_read / ingest_seconds / 1e6
+    spills: int = 0                  # spool .npz run files written
+    peak_rss_mb: float = 0.0         # process peak RSS (ru_maxrss), host
 
 
 def _dedup_sorted(lin: np.ndarray, order_hint: Optional[np.ndarray] = None):
@@ -287,9 +295,17 @@ class StreamingIngest:
             self._bucket_builder = IncrementalBucketBuilder(self.shape,
                                                             block_rows)
         self._finalized = False
+        self._busy_s = 0.0
 
     # -- streaming phase ---------------------------------------------------
     def add(self, chunk: Chunk) -> None:
+        t0 = time.perf_counter()
+        try:
+            self._add(chunk)
+        finally:
+            self._busy_s += time.perf_counter() - t0
+
+    def _add(self, chunk: Chunk) -> None:
         assert not self._finalized, "ingest already finalized"
         n = len(chunk)
         self.stats.entries_read += n
@@ -332,6 +348,8 @@ class StreamingIngest:
                     f"shard{s:04d}_run{len(self._spilled[s]):06d}.npz")
                 np.savez(path, indices=run[0], values=run[1])
                 self._spilled[s].append(path)
+                self.stats.spills += 1
+                obs.counter_add("ingest/spills")
 
     def consume(self, chunks: Iterable[Chunk],
                 progress: Optional[Callable[[IngestStats], None]] = None
@@ -378,12 +396,14 @@ class StreamingIngest:
         ``finalize_shard(s)`` per shard, or ``finalize_stats()`` for
         metadata alone — both keep the documented O(chunk)/O(shard)
         streaming bound."""
+        t0 = time.perf_counter()
         shards = []
         dropped_cross = 0
         for s in range(self.num_shards):
             merged = self.finalize_shard(s)
             self._runs[s] = []          # free the source runs shard-by-shard
             shards.append(merged)
+        self._busy_s += time.perf_counter() - t0
         self._finalized = True
         kept = sum(sh[0].shape[0] for sh in shards)
         dropped_cross = self.stats.entries_kept - kept
@@ -395,7 +415,38 @@ class StreamingIngest:
         if self._bucket_builder is not None:
             self.stats.bucket_block_rows = self._bucket_builder.block_rows
             self.stats.bucket_counts = tuple(self._bucket_builder.counts)
+        self._telemetry_finish()
         return shards, self.stats
+
+    def _telemetry_finish(self) -> None:
+        """Seal the ingest telemetry: throughput over busy time (generator
+        cost excluded — this measures the ingest pipeline, not the source),
+        spill count and peak process RSS; mirrored as obs gauges and one
+        JSONL event when tracing is enabled."""
+        st = self.stats
+        st.ingest_seconds = self._busy_s
+        st.mnnz_per_s = (st.entries_read / self._busy_s / 1e6
+                         if self._busy_s > 0 else 0.0)
+        try:
+            import resource
+            st.peak_rss_mb = (resource.getrusage(resource.RUSAGE_SELF)
+                              .ru_maxrss / 1024.0)
+        except Exception:            # non-POSIX host: leave the gauge at 0
+            pass
+        if obs.enabled():
+            obs.gauge_set("ingest/mnnz_per_s", st.mnnz_per_s)
+            obs.gauge_set("ingest/peak_rss_mb", st.peak_rss_mb)
+            obs.gauge_set("ingest/spills", st.spills)
+            obs.counter_add("ingest/entries_read", st.entries_read)
+            obs.counter_add("ingest/duplicates_dropped",
+                            st.duplicates_dropped)
+            obs.emit_event({"kind": "ingest", "shape": list(st.shape),
+                            "num_shards": st.num_shards, "nnz": st.nnz,
+                            "entries_read": st.entries_read,
+                            "chunks": st.chunks, "spills": st.spills,
+                            "seconds": st.ingest_seconds,
+                            "mnnz_per_s": st.mnnz_per_s,
+                            "peak_rss_mb": st.peak_rss_mb})
 
     def finalize_stats(self) -> IngestStats:
         """Metadata-only finalize: stats from the streaming phase without
@@ -410,6 +461,7 @@ class StreamingIngest:
         if self._bucket_builder is not None:
             self.stats.bucket_block_rows = self._bucket_builder.block_rows
             self.stats.bucket_counts = tuple(self._bucket_builder.counts)
+        self._telemetry_finish()
         return self.stats
 
 

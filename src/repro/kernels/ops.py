@@ -15,6 +15,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.sparse_tensor import SparseTensor
 from repro.core.utils import pad_axis, round_up
 from repro.kernels import ref as kref
@@ -44,16 +45,19 @@ def tttp_values(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
     use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
     factors = [None if f is None else (f[:, None] if f.ndim == 1 else f)
                for f in factors]
-    vals = st.values * st.mask
-    if not use_pallas:
-        return kref.tttp_ref(vals, st.indices, factors)
-    block_m = min(block_m, round_up(st.cap, 8))
-    mp = round_up(st.cap, block_m)
-    fs, r = _pad_factors(factors, block_r)
-    out = tttp_pallas(pad_axis(vals, mp), pad_axis(st.indices, mp), fs,
-                      block_m=block_m, block_r=min(block_r, round_up(r, 128)),
-                      interpret=_INTERPRET)
-    return out[:st.cap]
+    with obs.span("kernel/tttp", cap=st.cap, nnz=st.nnz,
+                  pallas=use_pallas) as sp:
+        vals = st.values * st.mask
+        if not use_pallas:
+            return sp.fence(kref.tttp_ref(vals, st.indices, factors))
+        block_m = min(block_m, round_up(st.cap, 8))
+        mp = round_up(st.cap, block_m)
+        fs, r = _pad_factors(factors, block_r)
+        out = tttp_pallas(pad_axis(vals, mp), pad_axis(st.indices, mp), fs,
+                          block_m=block_m,
+                          block_r=min(block_r, round_up(r, 128)),
+                          interpret=_INTERPRET)
+        return sp.fence(out[:st.cap])
 
 
 def tttp(st: SparseTensor, factors, **kw) -> SparseTensor:
@@ -68,14 +72,17 @@ def mttkrp_bucketed(buckets: RowBlockBuckets,
     """All-at-once MTTKRP over ingest-time buckets; returns (num_rows, R)."""
     use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
     num_rows = num_rows or buckets.shape[buckets.mode]
-    if use_pallas:
-        fs, r = _pad_factors(factors, block_r)
-        out = mttkrp_pallas(buckets, fs, block_r=block_r, interpret=_INTERPRET)
-        return out[:num_rows, :r]
-    out = kref.mttkrp_bucketed_ref(buckets.values, buckets.indices,
-                                   buckets.local_row, factors,
-                                   buckets.mode, buckets.block_rows)
-    return out[:num_rows]
+    with obs.span("kernel/mttkrp_bucketed", mode=buckets.mode,
+                  rows=num_rows, pallas=use_pallas) as sp:
+        if use_pallas:
+            fs, r = _pad_factors(factors, block_r)
+            out = mttkrp_pallas(buckets, fs, block_r=block_r,
+                                interpret=_INTERPRET)
+            return sp.fence(out[:num_rows, :r])
+        out = kref.mttkrp_bucketed_ref(buckets.values, buckets.indices,
+                                       buckets.local_row, factors,
+                                       buckets.mode, buckets.block_rows)
+        return sp.fence(out[:num_rows])
 
 
 def cg_matvec_bucketed(buckets: RowBlockBuckets,
@@ -85,10 +92,12 @@ def cg_matvec_bucketed(buckets: RowBlockBuckets,
     """Fused implicit-CG Gram matvec; buckets hold the Ω indicator values."""
     use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
     num_rows = num_rows or buckets.shape[buckets.mode]
-    if use_pallas:
-        out = cg_matvec_pallas(buckets, factors, x, interpret=_INTERPRET)
-        return out[:num_rows]
-    out = kref.cg_matvec_bucketed_ref(buckets.values, buckets.indices,
-                                      buckets.local_row, factors, x,
-                                      buckets.mode, buckets.block_rows)
-    return out[:num_rows]
+    with obs.span("kernel/cg_matvec_bucketed", mode=buckets.mode,
+                  rows=num_rows, pallas=use_pallas) as sp:
+        if use_pallas:
+            out = cg_matvec_pallas(buckets, factors, x, interpret=_INTERPRET)
+            return sp.fence(out[:num_rows])
+        out = kref.cg_matvec_bucketed_ref(buckets.values, buckets.indices,
+                                          buckets.local_row, factors, x,
+                                          buckets.mode, buckets.block_rows)
+        return sp.fence(out[:num_rows])

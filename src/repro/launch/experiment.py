@@ -33,6 +33,8 @@ import os
 import time
 from typing import Optional, Tuple
 
+from repro import obs
+
 ALGORITHMS = ("als", "ccd", "sgd", "ggn", "gcp")
 
 
@@ -166,10 +168,19 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
                    ckpt_root: Optional[str] = None,
                    algorithms: Optional[Tuple[str, ...]] = None,
                    losses: Optional[Tuple[str, ...]] = None,
-                   spool_dir: Optional[str] = None) -> dict:
+                   spool_dir: Optional[str] = None,
+                   trace: bool = False) -> dict:
     """Run every (algorithm, loss) pair of ``spec`` and write
-    ``<out_dir>/experiment_<name>.json``; returns the report dict."""
+    ``<out_dir>/experiment_<name>.json``; returns the report dict.
+    ``trace=True`` enables obs tracing with a JSONL event stream at
+    ``<out_dir>/trace_<name>.jsonl`` (per-sweep span trees additionally
+    ride the metric history in the checkpoint manifest)."""
     import jax
+
+    if trace:
+        os.makedirs(out_dir, exist_ok=True)
+        obs.enable(jsonl=os.path.join(out_dir, f"trace_{spec.name}.jsonl"))
+        obs.get_registry().reset()     # summary scoped to this experiment
 
     from repro.core import losses as LOSS
     from repro.core.completion.gcp import gcp_loss
@@ -213,6 +224,10 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
             "duplicates_dropped": stats.duplicates_dropped,
             "nnz_rows": list(stats.nnz_rows),
             "shard_nnz": list(stats.shard_nnz),
+            "busy_seconds": stats.ingest_seconds,
+            "mnnz_per_s": stats.mnnz_per_s,
+            "spills": stats.spills,
+            "peak_rss_mb": stats.peak_rss_mb,
         },
         "runs": [],
     }
@@ -245,8 +260,10 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
                     # the checkpoint manifest (RestartableLoop.last_metadata)
                     _m.extend(loop.last_metadata.get("metrics", [])[:i])
                 t0 = time.perf_counter()
-                state = _step(i, state)
-                jax.block_until_ready(jax.tree.leaves(state)[0])
+                with obs.span("sweep", algorithm=algorithm, loss=loss_name,
+                              sweep=i) as sp:
+                    state = _step(i, state)
+                    sp.fence(jax.tree.leaves(state)[0])
                 dt = time.perf_counter() - t0
                 fs = _get(state)
                 train = streaming.heldout_metrics(st, fs, link=_link)
@@ -257,6 +274,12 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
                     test = streaming.heldout_metrics(test_st, fs, link=_link)
                     entry["rmse_test"] = test["rmse"]
                     entry["poisson_deviance_test"] = test["poisson_deviance"]
+                if sp.record is not None:
+                    # per-sweep span tree (nested planner/kernel spans when
+                    # the solver ran any eager dispatch) rides the metric
+                    # history into the checkpoint manifest, so a resumed
+                    # experiment keeps its telemetry (DESIGN.md §11)
+                    entry["trace"] = sp.record
                 _m.append(entry)
                 print(f"  [{algorithm}/{loss_name}] sweep {i:3d} "
                       f"{dt * 1e3:8.1f} ms  obj={entry['objective']:.5g}  "
@@ -283,11 +306,17 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
                 "final": metrics[-1] if metrics else None,
             })
 
+    if trace:
+        report["obs"] = obs.get_registry().summary()
+        obs.emit_event({"kind": "experiment_summary", "spec": spec.name,
+                        "obs": report["obs"]})
     os.makedirs(out_dir, exist_ok=True)
     out_path = os.path.join(out_dir, f"experiment_{spec.name}.json")
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {out_path} ({len(report['runs'])} runs)")
+    if trace:
+        obs.disable()
     return report
 
 
@@ -309,6 +338,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--spool-dir", default=None,
                     help="spill ingest runs to disk (out-of-core)")
     ap.add_argument("--ckpt-root", default=None)
+    ap.add_argument("--trace", action="store_true",
+                    help="enable obs tracing; writes trace_<spec>.jsonl "
+                         "next to the experiment JSON")
     return ap
 
 
@@ -332,7 +364,7 @@ def main():
         algorithms=tuple(args.algorithms.split(",")) if args.algorithms
         else None,
         losses=tuple(args.losses.split(",")) if args.losses else None,
-        spool_dir=args.spool_dir)
+        spool_dir=args.spool_dir, trace=args.trace)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,114 @@
+"""Kernel-level roofline profiling — the wiring between the HLO term
+extractor (``repro.launch.roofline``) and the live telemetry layer.
+
+``profile_jitted(fn, *args)`` lowers + compiles one jitted callable,
+parses the compiled HLO into flop / HBM-byte / collective-byte terms,
+times the compiled executable with ``block_until_ready`` fencing, and
+reports achieved-vs-peak fractions:
+
+* ``frac_peak_compute``  — (HLO flops / measured s) / peak FLOP/s
+* ``frac_peak_memory``   — (HLO bytes / measured s) / peak HBM B/s
+* ``frac_roofline``      — roofline-implied best-case time / measured time
+  (1.0 = running exactly at the machine-model bound; the per-kernel
+  "achieved vs peak" number in PERF.md)
+
+Machine constants default to the TPU-v5e numbers in ``launch/roofline``;
+``REPRO_PEAK_FLOPS`` / ``REPRO_HBM_BW`` / ``REPRO_LINK_BW`` override them
+so CPU-container runs can report against realistic host ceilings. The
+fractions are only comparable within one machine model — the report
+records the constants used.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.obs import trace as _trace
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    peak_flops: float
+    hbm_bw: float
+    link_bw: float
+
+    @classmethod
+    def from_env(cls) -> "Machine":
+        from repro.launch import roofline as rl
+        return cls(
+            peak_flops=float(os.environ.get("REPRO_PEAK_FLOPS",
+                                            rl.PEAK_FLOPS)),
+            hbm_bw=float(os.environ.get("REPRO_HBM_BW", rl.HBM_BW)),
+            link_bw=float(os.environ.get("REPRO_LINK_BW", rl.LINK_BW)))
+
+
+def hlo_terms(compiled) -> Dict[str, float]:
+    """Parse a compiled executable's HLO into roofline terms (per device)
+    plus the XLA cost-analysis flop count for cross-checking: the parser's
+    unweighted dot flops must match ``cost_analysis()['flops']`` up to the
+    elementwise flops XLA additionally counts (tests/test_roofline.py)."""
+    from repro.launch.roofline import HloModule
+    t = HloModule(compiled.as_text()).totals()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    t["cost_analysis_flops"] = float(ca.get("flops", 0.0)) if ca else 0.0
+    return t
+
+
+def _time_compiled(run: Callable[[], Any], iters: int) -> float:
+    import jax
+    jax.block_until_ready(run())                # warmup
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def profile_jitted(fn: Callable, *args, name: str = "kernel",
+                   iters: int = 5,
+                   machine: Optional[Machine] = None) -> Dict[str, Any]:
+    """Compile ``fn(*args)``, extract HLO roofline terms, measure best-of-N
+    wall time, and return the achieved-vs-peak report dict. Also lands the
+    measurement in the obs registry (gauge per fraction, timing under
+    ``roofline/<name>``) and the JSONL sink when tracing is enabled."""
+    import jax
+    machine = machine or Machine.from_env()
+    jfn = jax.jit(fn)
+    compiled = jfn.lower(*args).compile()
+    terms = hlo_terms(compiled)
+    measured_s = _time_compiled(lambda: jfn(*args), iters)
+
+    compute_s = terms["flops"] / machine.peak_flops
+    memory_s = terms["bytes"] / machine.hbm_bw
+    collective_s = terms["collective_bytes"] / machine.link_bw
+    bound_s = max(compute_s, memory_s, collective_s)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    out = {
+        "name": name,
+        "measured_s": measured_s,
+        "hlo_flops": terms["flops"],
+        "hlo_bytes": terms["bytes"],
+        "hlo_collective_bytes": terms["collective_bytes"],
+        "cost_analysis_flops": terms["cost_analysis_flops"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "frac_peak_compute": (terms["flops"] / measured_s
+                              / machine.peak_flops if measured_s else 0.0),
+        "frac_peak_memory": (terms["bytes"] / measured_s
+                             / machine.hbm_bw if measured_s else 0.0),
+        "frac_roofline": bound_s / measured_s if measured_s else 0.0,
+        "machine": dataclasses.asdict(machine),
+    }
+    if _trace.enabled():
+        reg = _trace.get_registry()
+        reg.observe(f"roofline/{name}", measured_s)
+        reg.gauge_set(f"roofline/{name}/frac_roofline",
+                      out["frac_roofline"])
+        _trace.emit_event({"kind": "roofline", **out})
+    return out

@@ -33,6 +33,7 @@ tracing.
 from __future__ import annotations
 
 import math
+import time
 from typing import List, Optional, Sequence
 
 import jax
@@ -276,7 +277,34 @@ def execute(ir: pir.ContractionIR, path: str, operands: Sequence,
             config: Optional[PlannerConfig] = None):
     """Run the contraction along ``path``. Operand list must match the IR;
     ``ctx`` supplies the mesh axes whose collectives dispatch applies (None
-    or LOCAL ⇒ single-device semantics)."""
+    or LOCAL ⇒ single-device semantics).
+
+    With tracing enabled (``repro.obs``), each EAGER execution records a
+    span plus a predicted-vs-measured plan entry: the §5.3 cost-model
+    flop/traffic/comm prediction for this (IR, path) next to the fenced
+    wall time — the persistent accounting that validates the cost model
+    (DESIGN.md §11). Traced executions (inside jit) skip all of it."""
+    from repro import obs
+    if not (obs.enabled() and obs.trace_clean()):
+        return _execute(ir, path, operands, ctx, config)
+    kind = str(ir.kind)
+    with obs.span(f"planner/{kind}/{path}", expr=ir.expr, nnz=ir.nnz,
+                  rank=ir.rank_size) as sp:
+        t0 = time.perf_counter()
+        out = sp.fence(_execute(ir, path, operands, ctx, config))
+        seconds = time.perf_counter() - t0
+    from repro.planner import cost as pcost
+    c = pcost.estimate(ir, path)
+    obs.get_registry().record_plan(
+        f"{ir.expr}|{path}|m{ir.nnz}|r{ir.rank_size}",
+        kind, path, ir.expr,
+        {"flops": c.flops, "mem": c.mem, "comm": c.comm,
+         "seconds": c.seconds}, seconds)
+    return out
+
+
+def _execute(ir: pir.ContractionIR, path: str, operands: Sequence,
+             ctx: Optional[AxisCtx], config: Optional[PlannerConfig]):
     ctx = ctx if ctx is not None else LOCAL
     config = config if config is not None else default_config()
     if ir.kind == pir.DENSE:

@@ -20,6 +20,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
+from repro import obs
 from repro.checkpoint.checkpointer import Checkpointer, restore, _list_steps
 
 log = logging.getLogger(__name__)
@@ -89,8 +90,13 @@ class RestartableLoop:
         start, state = self._resume(init_state)
         for step in range(start, num_steps):
             t0 = time.perf_counter()
-            state = self.step_fn(step, state)
-            jax.block_until_ready(jax.tree.leaves(state)[0])
+            # the span tree of everything the step does (planner dispatch,
+            # kernels, the caller's own sweep spans) lands in the obs
+            # registry and, for the experiment harness, in the per-sweep
+            # metric history riding the checkpoint manifest
+            with obs.span("loop/step", step=step):
+                state = self.step_fn(step, state)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
             self.watchdog.observe(time.perf_counter() - t0, step)
             if (step + 1) % self.ckpt_every == 0:
                 self.ckpt.save_async(step, state, self._metadata(step))
