@@ -54,6 +54,7 @@ def main() -> None:
     for name, mod, group in MODULES:
         if args.only and args.only not in name:
             continue
+        # repro-lint: disable=JS003 -- coarse per-module progress wall time, not a measurement
         t0 = time.time()
         print(f"# -- {name} --", flush=True)
         try:
@@ -63,6 +64,7 @@ def main() -> None:
             traceback.print_exc()
         # a module that fails midway keeps whatever it managed to emit
         groups.setdefault(group, {}).update(drain_records())
+        # repro-lint: disable=JS003 -- coarse per-module progress wall time, not a measurement
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
     if args.json:
         os.makedirs(args.json, exist_ok=True)

@@ -1,4 +1,5 @@
 """repro: distributed-memory tensor completion with new sparse tensor kernels,
-in JAX — plus the assigned LM-architecture zoo, launcher, and dry-run stack."""
+in JAX — planner, distributed executor, streaming ingest, telemetry, and a
+static-analysis gate (``repro.analysis``)."""
 
 __version__ = "1.0.0"

@@ -1,0 +1,10 @@
+"""Static-analysis subsystem (DESIGN.md §12): jit-safety linter, planner
+contract checker, pytree/static-arg hygiene, and an import-graph dead-code
+report, behind one CLI (``python -m repro.analysis`` / ``repro-lint``).
+
+The passes are imported lazily by the CLI — importing this package must stay
+cheap (it is a dead-code analysis root and a console entry point).
+"""
+from repro.analysis.cli import main
+
+__all__ = ["main"]

@@ -1,0 +1,119 @@
+"""``python -m repro.analysis`` / ``repro-lint`` — the static-analysis CLI.
+
+Runs any combination of the four passes (DESIGN.md §12) and exits nonzero
+when any unsuppressed finding survives:
+
+* ``--lint``      jit-safety linter over ``src/repro`` + ``benchmarks``
+* ``--contracts`` planner contract sweep (all 7 IR families × candidate
+  paths × local/distributed, cost invariants, cache-key hygiene)
+* ``--pytrees``   registered-pytree aux hygiene + static-arg aliasing
+* ``--deadcode``  import-graph reachability report (unreachable modules
+  are findings; test-only modules are reported but do not fail the run)
+* ``--all``       everything above (the blocking CI configuration)
+
+``--corrupt PATH`` / ``--pytree-module MOD`` are the deliberate-fault hooks:
+CI's tripwire test uses them to prove a corrupted candidate path or a
+corrupted pytree aux actually fails the run (ISSUE acceptance criterion).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+
+def _repo_root(start: str) -> str:
+    """Nearest ancestor containing ``src/repro`` (supports running from
+    anywhere inside the repo)."""
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.isdir(os.path.join(cur, "src", "repro")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:  # fell off the filesystem: fall back to cwd
+            return os.path.abspath(start)
+        cur = parent
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="static analysis for the repro tensor-completion stack")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (CI configuration)")
+    ap.add_argument("--lint", action="store_true")
+    ap.add_argument("--contracts", action="store_true")
+    ap.add_argument("--pytrees", action="store_true")
+    ap.add_argument("--deadcode", action="store_true")
+    ap.add_argument("--root", default=".",
+                    help="repo root (default: auto-detect from cwd)")
+    ap.add_argument("--orders", default="3,4,5",
+                    help="tensor orders for the contract sweep")
+    ap.add_argument("--corrupt", default=None, metavar="PATH",
+                    help="deliberately corrupt this candidate path's avals "
+                         "(self-test: the sweep must then fail)")
+    ap.add_argument("--pytree-module", default=None, metavar="MOD",
+                    help="extra importable module exposing PYTREE_EXEMPLARS")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print suppressed lint findings")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        args.lint = args.contracts = args.pytrees = args.deadcode = True
+    if not (args.lint or args.contracts or args.pytrees or args.deadcode):
+        ap.error("nothing to do: pass --all or at least one pass flag")
+
+    root = _repo_root(args.root)
+    failures = 0
+
+    def report(pass_name: str, findings: List) -> None:
+        nonlocal failures
+        blocking = [f for f in findings if not f.suppressed]
+        suppressed = [f for f in findings if f.suppressed]
+        for f in blocking:
+            print(f.format())
+        if args.show_suppressed:
+            for f in suppressed:
+                print(f.format())
+        failures += len(blocking)
+        note = f", {len(suppressed)} suppressed" if suppressed else ""
+        print(f"[{pass_name}] {len(blocking)} finding(s){note}")
+
+    if args.lint:
+        from repro.analysis import lint
+        targets = [os.path.join(root, "src", "repro"),
+                   os.path.join(root, "benchmarks")]
+        report("lint", lint.lint_paths([t for t in targets
+                                        if os.path.exists(t)]))
+
+    if args.contracts:
+        from repro.analysis import contracts
+        orders = tuple(int(o) for o in args.orders.split(","))
+        contracts.set_corrupt(args.corrupt)
+        try:
+            report("contracts", contracts.run(orders))
+        finally:
+            contracts.set_corrupt(None)
+
+    if args.pytrees:
+        from repro.analysis import pytree_check
+        report("pytrees", pytree_check.run(root, args.pytree_module))
+
+    if args.deadcode:
+        from repro.analysis import deadcode
+        from repro.analysis.lint import Finding
+        rep = deadcode.analyze(root)
+        print(rep.format())
+        report("deadcode", [
+            Finding("imports", 0, 0, "DC001",
+                    f"module {m} is unreachable from product, benchmark, "
+                    f"and test roots — delete it or wire it in")
+            for m in sorted(rep.unreachable)])
+
+    print("OK" if failures == 0 else f"FAILED: {failures} finding(s)")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

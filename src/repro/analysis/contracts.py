@@ -1,0 +1,491 @@
+"""Pass 2 — planner contract checker (DESIGN.md §12.2).
+
+The planner's whole value proposition (paper §5.3) rests on structural
+contracts that, until this pass, were enforced only dynamically by tests:
+
+1. **All-candidate-paths-agree**: every legal execution path of a
+   :class:`~repro.planner.ir.ContractionIR` computes the same einsum, so it
+   must produce identical output *avals* (pytree structure + shape + dtype).
+   Checked abstractly — no kernel runs — via ``jax.eval_shape`` semantics:
+   ``jax.make_jaxpr(..., return_shape=True)`` with an ``axis_env`` binding
+   the distribution signature's mesh axes, so distributed variants
+   (psum/all-gather/reduce-scatter schedules) are certified without devices.
+2. **Cost-model invariants**: flops/mem/comm are finite and nonnegative for
+   every (IR, path); ``comm ≡ 0`` for LOCAL IRs; the densified-fallback
+   flops upper-bound every sparse path's flops at sub-saturation density
+   (the regime the paper's ranking argument assumes); estimates are
+   deterministic.
+3. **Cache-key hygiene**: plan-cache signatures are hashable, deterministic,
+   and collision-free across a grid of signature-relevant variations
+   (shape, cap, nnz, dtype, nnz_rows, forced path, DistInfo *sizes*,
+   PlannerConfig) — the static tripwire for the PR-3 mesh-aliasing bug
+   class (same-named axes on different-size meshes must not share a plan).
+
+The exhaustive offline sweep (``iter_cases``) covers all 7 IR families —
+DENSE, REDUCE, TTTP, TTM, classic MTTKRP, partial/multi-output MTTKRP, and
+CG_MATVEC — at orders 3–5, local plus every DistInfo variant the executor
+supports (data-sharded, model/column-sharded, row-sharded). The same
+certification runs online through ``plan_contraction(..., validate=True)``
+(see ``certify_candidates``), which the plan cache consults *before* a new
+plan is stored.
+
+The sparse operand's concrete indices are closed over (only values and
+factors are abstracted), so the ingest-cached bucketed/fused kernel routes —
+not just their tracing fallbacks — are what gets certified.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.lint import Finding  # shared report record
+
+_LETTERS = "ijklm"
+_EXTENTS = {3: (6, 4, 8), 4: (6, 4, 8, 4), 5: (6, 4, 8, 4, 6)}
+_RANK = 4
+_NNZ = 8
+
+FAMILIES = ("dense", "reduce", "tttp", "ttm", "mttkrp", "mttkrp_partial",
+            "cg_matvec")
+
+# deliberate-corruption hook (checker self-test / CI tripwire): when set to a
+# path name, that path's evaluated output avals are distorted, which MUST
+# make the sweep fail — proving the checker would catch a real violation
+_CORRUPT_PATH: Optional[str] = None
+
+
+def set_corrupt(path: Optional[str]) -> None:
+    global _CORRUPT_PATH
+    _CORRUPT_PATH = path
+
+
+class PlanContractError(RuntimeError):
+    """A candidate path's output avals disagree with its siblings."""
+
+
+@dataclasses.dataclass
+class Case:
+    """One (expression, operands, distribution) point of the sweep grid."""
+    name: str
+    family: str
+    expr: str
+    ir: object                 # ContractionIR
+    st: object                 # SparseTensor (concrete, tiny)
+    denses: Tuple              # dense operands in operand order
+    ctx: object                # AxisCtx
+    config: object             # PlannerConfig
+    axis_env: Tuple = ()       # (("data", 2),) etc.; () = local
+
+
+# ---------------------------------------------------------------------------
+# grid construction
+# ---------------------------------------------------------------------------
+
+def _make_sparse(shape, nnz=_NNZ, dense_dim=None):
+    """Deterministic tiny sparse tensor (no RNG: the sweep must be
+    bit-reproducible across runs and machines)."""
+    from repro.core.sparse_tensor import SparseTensor
+    idx = np.stack([(np.arange(nnz) * (d + 3)) % s
+                    for d, s in enumerate(shape)], axis=1).astype(np.int32)
+    if dense_dim is None:
+        vals = np.linspace(0.5, 1.5, nnz, dtype=np.float32)
+    else:
+        vals = np.linspace(0.5, 1.5, nnz * dense_dim,
+                           dtype=np.float32).reshape(nnz, dense_dim)
+    return SparseTensor.from_coo(idx, vals, shape)
+
+
+def _make_factor(rows, cols, seed):
+    return np.linspace(-1.0, 1.0, rows * cols,
+                       dtype=np.float32).reshape(rows, cols) + 0.01 * seed
+
+
+def _dist_variants(family: str):
+    """(variant name, DistInfo fields) pairs legal for this family."""
+    base = [("local", None)]
+    data = ("data", (2, 1, False))
+    model = ("model", (1, 2, False))
+    rowsh = ("rowsharded", (2, 1, True))
+    return {
+        "dense": base,
+        "reduce": base + [data],
+        "tttp": base + [data, model, rowsh],
+        "ttm": base + [data],
+        "mttkrp": base + [data, model, rowsh],
+        "mttkrp_partial": base + [data],
+        "cg_matvec": base + [data, model],
+    }[family]
+
+
+def _family_exprs(family: str, order: int) -> List[str]:
+    s = _LETTERS[:order]
+    if family == "dense":
+        return ["ab,bc->ac"] if order == 3 else []
+    if family == "reduce":
+        return [f"{s}->{s[-1]}{s[0]}"]
+    if family == "tttp":
+        facs = ",".join(f"{c}r" for c in s)
+        return [f"{s},{facs}->{s}"]
+    if family == "ttm":
+        out = [f"{s},{s[-1]}r->{s[:-1]}r"]
+        if order == 3:
+            out.append(f"{s},{s[-1]}r->r{s[:-1]}")   # permuted output
+        return out
+    if family == "mttkrp":
+        facs = ",".join(f"{c}r" for c in s[1:])
+        out = [f"{s},{facs}->{s[0]}r"]
+        if order == 3:
+            out.append(f"{s},{facs}->r{s[0]}")       # permuted output
+        return out
+    if family == "mttkrp_partial":
+        if order < 4:
+            return []                    # order-3 partial degenerates to TTM
+        kept, contracted = s[:2], s[2:]
+        facs = ",".join(f"{c}r" for c in contracted)
+        return [f"{s},{facs}->{kept}r"]
+    if family == "cg_matvec":
+        r_facs = ",".join(f"{c}r" for c in s[1:])
+        y_facs = ",".join(f"{c}y" for c in s)
+        return [f"{s},{r_facs},{y_facs}->{s[0]}r"]
+    raise ValueError(family)
+
+
+def _build_case(family: str, expr: str, order: int, variant: str,
+                dist_fields) -> Case:
+    from repro.core.distributed import LOCAL, AxisCtx
+    from repro.planner import ir as pir
+    from repro.planner.config import default_config
+
+    dist = None if dist_fields is None else pir.DistInfo(*dist_fields)
+    ctx, axis_env = LOCAL, ()
+    if dist is not None:
+        names = []
+        if dist.data_size > 1 or dist.rowsharded:
+            names.append(("data", max(dist.data_size, 1)))
+        if dist.model_size > 1:
+            names.append(("model", dist.model_size))
+        ctx = AxisCtx(
+            data="data" if any(n == "data" for n, _ in names) else None,
+            model="model" if any(n == "model" for n, _ in names) else None)
+        axis_env = tuple(names)
+
+    lhs, _ = expr.split("->")
+    terms = lhs.split(",")
+    if family == "dense":
+        sizes = {"a": 3, "b": 4, "c": 5}
+        denses = tuple(_make_factor(sizes[t[0]], sizes[t[1]], i)
+                       for i, t in enumerate(terms))
+        ir = pir.build_ir(expr, denses, dist=dist)
+        return Case(f"{family}/{variant}", family, expr, ir, None, denses,
+                    ctx, default_config(), axis_env)
+
+    shape = _EXTENTS[order]
+    sizes = dict(zip(_LETTERS[:order], shape))
+    rank = _RANK // dist.model_size if dist is not None else _RANK
+    sizes["r"] = sizes["y"] = rank
+    st = _make_sparse(shape)
+    row_div = dist.data_size if (dist is not None and dist.rowsharded) else 1
+
+    # factor construction with object sharing across the CG halves: one
+    # array per sparse mode, reused wherever that mode appears (the fused
+    # kernel's legality depends on `is`-sharedness of the two halves)
+    per_mode: Dict[str, np.ndarray] = {}
+    denses_l: List = []
+    for i, t in enumerate(terms[1:]):
+        mode_c = t[0]
+        if family == "cg_matvec" and t == f"{mode_c}y" and mode_c != lhs[0]:
+            arr = per_mode[mode_c]                    # share with the r half
+        else:
+            arr = _make_factor(sizes[mode_c] // row_div, sizes[t[1]], i)
+            per_mode.setdefault(mode_c, arr)
+        denses_l.append(arr)
+    operands = [st] + denses_l
+    ir = pir.build_ir(expr, operands, dist=dist)
+    perm = "/perm" if expr.split("->")[1][0] == "r" else ""
+    return Case(f"{family}/o{order}/{variant}{perm}", family, expr, ir, st,
+                tuple(denses_l), ctx, default_config(), axis_env)
+
+
+def iter_cases(orders: Sequence[int] = (3, 4, 5),
+               families: Sequence[str] = FAMILIES) -> List[Case]:
+    """The exhaustive sweep grid: family × order × expression × DistInfo."""
+    cases: List[Case] = []
+    for family in families:
+        for order in orders:
+            for expr in _family_exprs(family, order):
+                for variant, dist_fields in _dist_variants(family):
+                    cases.append(_build_case(family, expr, order, variant,
+                                             dist_fields))
+    # trailing-dense-axis reductions (values carry an R axis that rides
+    # along unreduced — only the REDUCE family admits them)
+    if "reduce" in families and 3 in orders:
+        from repro.planner import ir as pir
+        for variant, df in _dist_variants("reduce"):
+            st = _make_sparse(_EXTENTS[3], dense_dim=_RANK)
+            dist = None if df is None else pir.DistInfo(*df)
+            from repro.core.distributed import LOCAL, AxisCtx
+            ctx = LOCAL if dist is None else AxisCtx(data="data")
+            env = () if dist is None else (("data", dist.data_size),)
+            ir = pir.build_ir("ijk->i", [st], dist=dist)
+            from repro.planner.config import default_config
+            cases.append(Case(f"reduce/o3+dense/{variant}", "reduce",
+                              "ijk->i", ir, st, (), ctx, default_config(),
+                              env))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# abstract path evaluation
+# ---------------------------------------------------------------------------
+
+def _aval_signature(out) -> Tuple:
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(out)
+    return (str(treedef),
+            tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+
+def path_avals(case: Case, path: str) -> Tuple:
+    """Abstractly evaluate one candidate path: pytree structure plus leaf
+    (shape, dtype) pairs, traced under the case's axis_env (collectives are
+    evaluated against the DistInfo's axis sizes; no devices required)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.planner import dispatch as pdispatch
+
+    ir, st = case.ir, case.st
+
+    # dedupe shared dense operands so `is`-identity survives tracing (the
+    # fused CG kernel is only legal when the two halves share factors)
+    uniq: List = []
+    posmap: List[int] = []
+    for d in case.denses:
+        for k, u in enumerate(uniq):
+            if d is u:
+                posmap.append(k)
+                break
+        else:
+            posmap.append(len(uniq))
+            uniq.append(d)
+
+    def f(*args):
+        if st is None:
+            ops: List = list(args)
+        else:
+            values, uds = args[0], args[1:]
+            dense = [uds[k] for k in posmap]
+            ops = [None] * len(ir.operands)
+            ops[ir.sparse_pos] = st.with_values(values)
+            for pos, dop in zip(ir.dense_positions, dense):
+                ops[pos] = dop
+        out = pdispatch.execute(ir, path, ops, ctx=case.ctx,
+                                config=case.config)
+        if _CORRUPT_PATH is not None and path == _CORRUPT_PATH:
+            out = jax.tree.map(lambda a: jnp.expand_dims(a, 0), out)
+        return out
+
+    args = (tuple(uniq) if st is None
+            else (st.values,) + tuple(uniq))
+    env = list(case.axis_env) if case.axis_env else None
+    _, shapes = jax.make_jaxpr(f, axis_env=env, return_shape=True)(*args)
+    return _aval_signature(shapes)
+
+
+def check_path_agreement(cases: Sequence[Case]) -> List[Finding]:
+    """Contract 1: identical avals across every candidate path, per case."""
+    from repro.planner import cost as pcost
+    findings: List[Finding] = []
+    for case in cases:
+        sigs: Dict[str, Tuple] = {}
+        for path in pcost.candidate_paths(case.ir):
+            try:
+                sigs[path] = path_avals(case, path)
+            except Exception as e:  # an un-executable candidate IS a finding
+                findings.append(Finding(
+                    "contracts", 0, 0, "CT001",
+                    f"[{case.name}] path {path!r} failed abstract "
+                    f"evaluation for {case.expr!r}: {type(e).__name__}: {e}"))
+        if len(set(sigs.values())) > 1:
+            ref_path, ref = next(iter(sigs.items()))
+            for path, sig in sigs.items():
+                if sig != ref:
+                    findings.append(Finding(
+                        "contracts", 0, 0, "CT001",
+                        f"[{case.name}] path {path!r} avals {sig} disagree "
+                        f"with {ref_path!r} avals {ref} for {case.expr!r}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# cost-model invariants
+# ---------------------------------------------------------------------------
+
+def check_cost_invariants(cases: Sequence[Case]) -> List[Finding]:
+    from repro.planner import cost as pcost
+    findings: List[Finding] = []
+
+    def bad(case, msg):
+        findings.append(Finding("contracts", 0, 0, "CT002",
+                                f"[{case.name}] {msg}"))
+
+    for case in cases:
+        ir = case.ir
+        costs = {p: pcost.estimate(ir, p)
+                 for p in pcost.candidate_paths(ir)}
+        for p, c in costs.items():
+            again = pcost.estimate(ir, p)
+            if c != again:
+                bad(case, f"estimate({p!r}) is nondeterministic: "
+                          f"{c} vs {again}")
+            for field in ("flops", "mem", "comm"):
+                v = getattr(c, field)
+                if not math.isfinite(v) or v < 0:
+                    bad(case, f"path {p!r} has invalid {field}={v!r}")
+            if ir.dist is None and c.comm != 0.0:
+                bad(case, f"path {p!r} charges comm={c.comm} on a LOCAL IR")
+            if not math.isfinite(c.seconds) or c.seconds < 0:
+                bad(case, f"path {p!r} has invalid seconds={c.seconds!r}")
+        dense = costs.get("dense")
+        if dense is not None:
+            for p, c in costs.items():
+                if p != "dense" and c.flops > dense.flops * (1 + 1e-9):
+                    bad(case, f"sparse path {p!r} flops {c.flops} exceed the "
+                              f"densified fallback's {dense.flops} at "
+                              f"sub-saturation density — the §5.3 ranking "
+                              f"premise is violated")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# cache-key hygiene
+# ---------------------------------------------------------------------------
+
+def check_cache_keys() -> List[Finding]:
+    """Plan-cache signatures over a grid of signature-relevant variations
+    must be hashable, deterministic, and pairwise distinct."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    from repro.core.distributed import LOCAL, AxisCtx
+    from repro.planner import ir as pir
+    from repro.planner import plan as pplan
+    from repro.planner.config import PlannerConfig
+
+    findings: List[Finding] = []
+    expr = "ijk,jr,kr->ir"
+    shape = (6, 4, 8)
+    st = _make_sparse(shape)
+    a, b = _make_factor(4, _RANK, 0), _make_factor(8, _RANK, 1)
+    ops = (st, a, b)
+    from repro.core.sparse_tensor import SparseTensor
+    st_cap = SparseTensor.from_coo(np.asarray(st.indices)[:_NNZ],
+                                   np.asarray(st.values)[:_NNZ], shape,
+                                   cap=2 * _NNZ)
+
+    def sig(label, operands=ops, path=None, ctx=LOCAL, dist=None,
+            config=PlannerConfig()):
+        return label, pplan._signature(expr, operands, path, ctx, dist,
+                                       config)
+
+    variations = [
+        sig("base"),
+        sig("cap", (st_cap, a, b)),
+        sig("nnz", (_make_sparse(shape, nnz=4), a, b)),
+        sig("dtype", (st.astype(jnp.bfloat16), a, b)),
+        sig("nnz_rows", (dc.replace(st, nnz_rows=(3, 4, 5)), a, b)),
+        sig("shape", (_make_sparse((6, 4, 10)), a,
+                      _make_factor(10, _RANK, 1))),
+        sig("path", path="all_at_once"),
+        sig("ctx-data", ctx=AxisCtx(data="data"),
+            dist=pir.DistInfo(2, 1, False)),
+        sig("ctx-data4", ctx=AxisCtx(data="data"),
+            dist=pir.DistInfo(4, 1, False)),       # PR-3 aliasing class:
+        sig("ctx-model", ctx=AxisCtx(model="model"),  # same names, new sizes
+            dist=pir.DistInfo(1, 2, False)),
+        sig("rowsharded", ctx=AxisCtx(data="data"),
+            dist=pir.DistInfo(2, 1, True)),
+        sig("config", config=PlannerConfig(block_rows=16)),
+    ]
+
+    # determinism: rebuilding the same operands from scratch must reproduce
+    # the same signature object-for-object (hash and equality)
+    _, base_key = variations[0]
+    again = pplan._signature(
+        expr, (_make_sparse(shape), _make_factor(4, _RANK, 0),
+               _make_factor(8, _RANK, 1)), None, LOCAL, None, PlannerConfig())
+    try:
+        if base_key != again or hash(base_key) != hash(again):
+            findings.append(Finding(
+                "contracts", 0, 0, "CT003",
+                "cache key is nondeterministic: identical configurations "
+                "built twice produce different signatures"))
+    except TypeError:
+        pass  # unhashability is reported per-variation below
+
+    seen: Dict[Tuple, str] = {}
+    for label, key in variations:
+        try:
+            hash(key)
+        except TypeError as e:
+            findings.append(Finding("contracts", 0, 0, "CT003",
+                                    f"cache key {label!r} is unhashable: {e}"))
+            continue
+        if key in seen:
+            findings.append(Finding(
+                "contracts", 0, 0, "CT003",
+                f"cache-key COLLISION: {label!r} and {seen[key]!r} produce "
+                f"the same plan-cache signature — distinct configurations "
+                f"would silently share a plan (the PR-3 mesh-aliasing bug "
+                f"class)"))
+        seen[key] = label
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# online certification (the plan-cache validate= hook)
+# ---------------------------------------------------------------------------
+
+def certify_candidates(ir, paths: Sequence[str], operands: Sequence,
+                       ctx, config) -> None:
+    """Raise :class:`PlanContractError` unless every candidate path of this
+    concrete call produces identical output avals. Called by
+    ``plan_contraction(..., validate=True)`` before a new plan may enter the
+    cache; also usable directly on user-constructed IRs."""
+    import jax
+
+    from repro.planner import dispatch as pdispatch
+
+    def run_path(path, *ops):
+        out = pdispatch.execute(ir, path, list(ops), ctx=ctx, config=config)
+        if _CORRUPT_PATH is not None and path == _CORRUPT_PATH:
+            import jax.numpy as jnp
+            out = jax.tree.map(lambda a: jnp.expand_dims(a, 0), out)
+        return out
+
+    sigs: Dict[str, Tuple] = {}
+    for path in paths:
+        out = jax.eval_shape(
+            lambda *ops, _p=path: run_path(_p, *ops), *operands)
+        sigs[path] = _aval_signature(out)
+    if len(set(sigs.values())) > 1:
+        detail = "; ".join(f"{p}: {s}" for p, s in sorted(sigs.items()))
+        raise PlanContractError(
+            f"candidate paths of {ir.expr!r} disagree on output avals — "
+            f"refusing to cache a plan: {detail}")
+
+
+# ---------------------------------------------------------------------------
+# top-level entry
+# ---------------------------------------------------------------------------
+
+def run(orders: Sequence[int] = (3, 4, 5)) -> List[Finding]:
+    cases = iter_cases(orders)
+    findings = check_path_agreement(cases)
+    findings += check_cost_invariants(cases)
+    findings += check_cache_keys()
+    return findings

@@ -1,0 +1,190 @@
+"""Import-graph dead-code report (DESIGN.md §12.4).
+
+Builds the static import graph over ``src/repro`` (AST-level: absolute
+``repro.*`` imports and relative imports, with symbol imports resolved to a
+module when one exists) and classifies every module by reachability:
+
+* **product** — reachable from the product entry points (``DEFAULT_ROOTS``:
+  the completion/experiment/report CLIs, the public einsum API, and this
+  analysis subsystem);
+* **bench-only** — reachable only through ``benchmarks/``;
+* **test-only** — reachable only through ``tests/`` (listed with the test
+  files that touch them: candidates for deletion alongside their tests);
+* **unreachable** — imported by nothing at all. These BLOCK ``--all``: dead
+  modules rot silently (the seed's LM-architecture zoo sat unreachable for
+  five PRs until this report inventoried it).
+
+Importing a submodule executes its parent packages, so ``repro.a.b`` implies
+an edge to ``repro.a``; package ``__init__`` edges are followed like any
+other import.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Set
+
+DEFAULT_ROOTS = (
+    "repro.launch.complete",      # completion CLI (all algorithms, any mesh)
+    "repro.launch.experiment",    # named experiment specs / nightly sweeps
+    "repro.launch.report",        # PERF.md / dryrun-table renderer
+    "repro.core.api",             # the public einsum/TTTP library surface
+    "repro.analysis",             # this subsystem (repro-lint entry point)
+)
+
+
+@dataclasses.dataclass
+class Report:
+    modules: Dict[str, Set[str]]          # module -> direct repro imports
+    product: Set[str]
+    bench_only: Set[str]
+    test_only: Dict[str, Set[str]]        # module -> test files touching it
+    unreachable: Set[str]
+
+    def format(self) -> str:
+        lines = [f"import graph: {len(self.modules)} modules, "
+                 f"{len(self.product)} reachable from product roots"]
+        if self.bench_only:
+            lines.append("bench-only modules:")
+            lines += [f"  {m}" for m in sorted(self.bench_only)]
+        if self.test_only:
+            lines.append("test-only modules (delete with their tests, or "
+                         "wire into a product path):")
+            for m in sorted(self.test_only):
+                vias = ", ".join(sorted(self.test_only[m]))
+                lines.append(f"  {m}  (via {vias})")
+        if self.unreachable:
+            lines.append("UNREACHABLE modules (imported by nothing):")
+            lines += [f"  {m}" for m in sorted(self.unreachable)]
+        return "\n".join(lines)
+
+
+def _module_name(path: str, src_root: str) -> str:
+    rel = os.path.relpath(path, src_root)
+    parts = rel[:-3].split(os.sep)           # strip .py
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _imports_of(path: str, module: str, known: Set[str]) -> Set[str]:
+    """Direct repro-module imports of one file, resolved against ``known``."""
+    with open(path) as fh:
+        try:
+            tree = ast.parse(fh.read(), filename=path)
+        except SyntaxError:
+            return set()
+    out: Set[str] = set()
+
+    def add(name: str) -> None:
+        # resolve to the deepest known module prefix (symbol imports from a
+        # package resolve to the package)
+        parts = name.split(".")
+        for i in range(len(parts), 0, -1):
+            cand = ".".join(parts[:i])
+            if cand in known:
+                out.add(cand)
+                return
+
+    pkg_parts = module.split(".")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[0] == "repro":
+                    add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:                    # relative import
+                base = pkg_parts[:len(pkg_parts) - node.level + 1] \
+                    if path.endswith("__init__.py") else \
+                    pkg_parts[:len(pkg_parts) - node.level]
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            if mod.split(".")[0] == "repro":
+                add(mod)
+                for a in node.names:
+                    add(f"{mod}.{a.name}")
+    return out
+
+
+def build_graph(src_root: str) -> Dict[str, Set[str]]:
+    paths: Dict[str, str] = {}
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if fn.endswith(".py"):
+                p = os.path.join(dirpath, fn)
+                paths[_module_name(p, src_root)] = p
+    known = set(paths)
+    graph: Dict[str, Set[str]] = {}
+    for mod, p in paths.items():
+        deps = _imports_of(p, mod, known)
+        # importing a submodule executes its parents
+        parts = mod.split(".")
+        for i in range(1, len(parts)):
+            parent = ".".join(parts[:i])
+            if parent in known:
+                deps.add(parent)
+        graph[mod] = deps - {mod}
+    return graph
+
+
+def _reach(graph: Dict[str, Set[str]], roots: Sequence[str]) -> Set[str]:
+    seen: Set[str] = set()
+    stack = [r for r in roots if r in graph]
+    while stack:
+        m = stack.pop()
+        if m in seen:
+            continue
+        seen.add(m)
+        stack.extend(graph.get(m, ()))
+    return seen
+
+
+def _external_imports(dir_: str, known: Set[str]) -> Dict[str, Set[str]]:
+    """{module: set(files importing it)} for .py files outside src/repro."""
+    out: Dict[str, Set[str]] = {}
+    if not os.path.isdir(dir_):
+        return out
+    for dirpath, dirnames, filenames in os.walk(dir_):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            p = os.path.join(dirpath, fn)
+            for mod in _imports_of(p, "", known):
+                out.setdefault(mod, set()).add(os.path.relpath(p))
+    return out
+
+
+def analyze(repo_root: str = ".",
+            roots: Optional[Sequence[str]] = None) -> Report:
+    src_root = os.path.join(repo_root, "src")
+    graph = build_graph(src_root)
+    known = set(graph)
+    roots = tuple(roots) if roots else DEFAULT_ROOTS
+    # ``python -m pkg`` entry points are roots by construction
+    roots += tuple(m for m in graph if m.endswith(".__main__"))
+    product = _reach(graph, roots)
+
+    bench = _external_imports(os.path.join(repo_root, "benchmarks"), known)
+    tests = _external_imports(os.path.join(repo_root, "tests"), known)
+    bench_reach = _reach(graph, list(bench))
+    test_reach = _reach(graph, list(tests))
+
+    bench_only, test_only, unreachable = set(), {}, set()
+    for mod in known:
+        if mod in product or mod == "repro":
+            continue
+        if mod in bench_reach:
+            bench_only.add(mod)
+        elif mod in test_reach:
+            vias: Set[str] = set()
+            for t_mod, files in tests.items():
+                if mod == t_mod or mod in _reach(graph, [t_mod]):
+                    vias |= files
+            test_only[mod] = vias
+        else:
+            unreachable.add(mod)
+    return Report(graph, product, bench_only, test_only, unreachable)

@@ -1,0 +1,397 @@
+"""Pass 1 — jit-safety linter (DESIGN.md §12.1).
+
+AST-based rules over ``src/repro`` that catch tracer-unsafe idioms *before*
+XLA does. The planner/kernel/completion layers are reachable from jitted
+entry points (``api.einsum`` → ``planner.dispatch`` → ``kernels``), where a
+Python-level branch on an array value or a host coercion either crashes with
+a ``TracerBoolConversionError`` at first jit or — worse — silently bakes one
+concrete value into the compiled program. The telemetry layer (PR 5) adds a
+second failure class: un-fenced wall-clock timing of async-dispatched device
+work measures dispatch latency, not the kernel.
+
+Rules (applicability depends on the file's scope, see ``scope_rules``):
+
+* ``JS001`` traced-branch     — Python ``if``/``while``/ternary branching on
+  a ``jnp.``/``jax.lax`` expression in jit-reachable code; use ``jnp.where``
+  / ``lax.cond`` / ``lax.while_loop``.
+* ``JS002`` eager-coercion    — ``.item()`` / ``float()`` / ``int()`` /
+  ``bool()`` / ``np.asarray()`` of a ``jnp.``-derived value in jit-reachable
+  code: a silent host sync eagerly, a crash under jit.
+* ``JS003`` unfenced-timing   — ``time.perf_counter``/``time.time`` in a
+  function with no ``block_until_ready``/``.fence(`` in scope; library code
+  must use ``repro.obs.trace.span`` (jit-aware) + ``sp.fence``.
+* ``JS004`` host-io-in-loop   — ``print``/``logging`` calls inside loop
+  bodies of library code (sweep loops sync and serialize the device stream);
+  emit through ``repro.obs`` counters/spans instead.
+* ``JS005`` nondeterminism    — stdlib ``random.*``, legacy global
+  ``np.random.*``, or seedless ``np.random.default_rng()`` outside ``data/``
+  (where every generator is SeedSequence-derived by construction).
+* ``JS000`` bad-suppression   — a suppression comment with no reason string
+  or an unknown rule id. Never suppressible.
+
+Suppression syntax (requires a reason after ``--``)::
+
+    x = arr.item()  # repro-lint: disable=JS002 -- eager CLI path, never jitted
+
+A comment-only suppression line applies to the next line as well.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "JS000": "bad-suppression",
+    "JS001": "traced-branch",
+    "JS002": "eager-coercion",
+    "JS003": "unfenced-timing",
+    "JS004": "host-io-in-loop",
+    "JS005": "nondeterminism",
+    # non-lint passes report through the same Finding record; these rule ids
+    # are NOT inline-suppressible (they describe structural contracts)
+    "CT001": "path-aval-disagreement",
+    "CT002": "cost-invariant",
+    "CT003": "cache-key",
+    "PT001": "pytree-roundtrip",
+    "PT002": "static-arg-aliasing",
+    "DC001": "dead-code",
+}
+
+# jit-reachable library layers: everything here may run under a jax trace
+_JIT_PREFIXES = ("core/", "kernels/", "planner/", "sparse/")
+# host-side layers: eager by design (CLI drivers, ingest, checkpoint I/O)
+_HOST_PREFIXES = ("launch/", "runtime/", "checkpoint/", "optim/", "obs/",
+                  "analysis/", "data/")
+# the sanctioned timing primitive itself (span measures wall time by design)
+_TIMING_EXEMPT = ("obs/trace.py",)
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+?)\s*(?:--\s*(.*\S))?\s*$")
+# a line that *looks* like a suppression comment but fails _SUPPRESS_RE is
+# malformed; requiring the comment-start form keeps prose mentions inert
+_HINT_RE = re.compile(r"#\s*repro-lint:")
+
+_STDLIB_RANDOM = {"random", "randint", "randrange", "choice", "choices",
+                  "shuffle", "sample", "uniform", "gauss", "seed",
+                  "getrandbits", "betavariate", "normalvariate"}
+_NP_RANDOM_LEGACY = {"rand", "randn", "randint", "random", "random_sample",
+                     "ranf", "choice", "shuffle", "permutation", "uniform",
+                     "normal", "seed", "poisson", "binomial", "standard_normal"}
+_LOG_METHODS = {"debug", "info", "warning", "warn", "error", "critical",
+                "exception", "log"}
+_LOG_ROOTS = {"log", "logger", "logging"}
+_TIME_FNS = {"perf_counter", "time", "monotonic", "process_time"}
+_FENCE_NAMES = {"block_until_ready", "fence"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    file: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    suppressed: bool = False
+    reason: str = ""
+
+    def format(self) -> str:
+        tag = f" [suppressed: {self.reason}]" if self.suppressed else ""
+        return (f"{self.file}:{self.line}:{self.col}: {self.rule} "
+                f"({RULES[self.rule]}) {self.message}{tag}")
+
+
+def scope_rules(path: str) -> Set[str]:
+    """Rules applicable to ``path`` (see module docstring). Unknown files
+    get the host-side set — timing and determinism hold everywhere."""
+    norm = path.replace(os.sep, "/")
+    if "src/repro/" in norm:
+        rel = norm.split("src/repro/", 1)[1]
+    elif norm.startswith("repro/"):
+        rel = norm.split("repro/", 1)[1]
+    else:
+        rel = ""
+        if "/benchmarks/" in norm or norm.startswith("benchmarks/"):
+            return {"JS003", "JS005"}
+    if any(rel.startswith(p) for p in _TIMING_EXEMPT):
+        return {"JS005"}
+    if any(rel.startswith(p) for p in _JIT_PREFIXES):
+        return {"JS001", "JS002", "JS003", "JS004", "JS005"}
+    if rel.startswith("data/"):
+        # seeded host RNG lives here by charter; JS005 exempt
+        return {"JS003", "JS004"}
+    if any(rel.startswith(p) for p in _HOST_PREFIXES):
+        return {"JS003", "JS005"}
+    return {"JS003", "JS005"}
+
+
+# ---------------------------------------------------------------------------
+# expression classification helpers
+# ---------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """('np', 'random', 'rand') for ``np.random.rand`` — None when the chain
+    is not a pure Name/Attribute path."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _is_traced_call(call: ast.Call) -> bool:
+    """A call that produces a jax array in idiomatic repro code: rooted at
+    the ``jnp`` alias, ``jax.numpy``, or ``jax.lax``."""
+    d = _dotted(call.func)
+    if d is None:
+        return False
+    if d[0] == "jnp":
+        return True
+    return len(d) >= 2 and d[0] == "jax" and d[1] in ("numpy", "lax")
+
+
+def _contains_traced_call(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Call) and _is_traced_call(n)
+               for n in ast.walk(node))
+
+
+# ---------------------------------------------------------------------------
+# the visitor
+# ---------------------------------------------------------------------------
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, rules: Set[str]):
+        self.path = path
+        self.rules = rules
+        self.raw: List[Finding] = []
+        self.loop_depth = 0
+        # stack of per-function state: list of (line, col) of timing calls,
+        # and whether a fence call was seen in that function body
+        self.fn_stack: List[Dict] = [{"timing": [], "fenced": False}]
+
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        if rule in self.rules:
+            self.raw.append(Finding(self.path, node.lineno, node.col_offset,
+                                    rule, msg))
+
+    # -- function scopes (JS003 is resolved per function) -------------------
+    def _visit_fn(self, node):
+        self.fn_stack.append({"timing": [], "fenced": False})
+        self.generic_visit(node)
+        st = self.fn_stack.pop()
+        if st["fenced"]:
+            # a fenced nested closure fences its enclosing timing scope (the
+            # idiomatic `def run(): block_until_ready(...)` timing wrapper)
+            self.fn_stack[-1]["fenced"] = True
+        if not st["fenced"]:
+            for line, col, name in st["timing"]:
+                self.raw.append(Finding(
+                    self.path, line, col, "JS003",
+                    f"time.{name}() with no block_until_ready/fence in this "
+                    f"function — async dispatch makes the wall time "
+                    f"meaningless; use repro.obs.trace.span + sp.fence"))
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    # -- branches (JS001) ---------------------------------------------------
+    def _check_branch(self, node, kind: str):
+        if _contains_traced_call(node.test):
+            self._emit("JS001", node,
+                       f"Python {kind} branches on a jnp/jax.lax expression "
+                       f"— under jit this is a TracerBoolConversionError; "
+                       f"use jnp.where / lax.cond / lax.while_loop")
+
+    def visit_If(self, node):
+        self._check_branch(node, "`if`")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node):
+        self._check_branch(node, "ternary")
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        self._check_branch(node, "`while`")
+        self.loop_depth += 1
+        for child in node.body + node.orelse:
+            self.visit(child)
+        self.loop_depth -= 1
+
+    def visit_For(self, node):
+        self.visit(node.iter)
+        self.loop_depth += 1
+        for child in node.body + node.orelse:
+            self.visit(child)
+        self.loop_depth -= 1
+
+    def visit_Assert(self, node):
+        if _contains_traced_call(node.test):
+            self._emit("JS001", node,
+                       "`assert` on a jnp/jax.lax expression — traced "
+                       "asserts are silently constant-folded or crash; use "
+                       "checkify or a host-side check on fetched values")
+        self.generic_visit(node)
+
+    # -- calls (JS002/JS003/JS004/JS005) ------------------------------------
+    def visit_Call(self, node):
+        d = _dotted(node.func)
+
+        # JS002: eager coercions of traced values
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+                and not node.args and not node.keywords):
+            self._emit("JS002", node,
+                       ".item() forces a host sync (and crashes under jit); "
+                       "keep the value on device or fetch explicitly via "
+                       "jax.device_get at the eager boundary")
+        elif (isinstance(node.func, ast.Name)
+              and node.func.id in ("float", "int", "bool")
+              and len(node.args) == 1
+              and _contains_traced_call(node.args[0])):
+            self._emit("JS002", node,
+                       f"{node.func.id}() of a jnp/jax.lax expression — a "
+                       f"TracerConversionError under jit; keep the value as "
+                       f"an array or coerce at the eager boundary only")
+        elif (d is not None and len(d) >= 2 and d[0] in ("np", "numpy")
+              and d[-1] in ("asarray", "array") and node.args
+              and _contains_traced_call(node.args[0])):
+            self._emit("JS002", node,
+                       "np.asarray of a jnp/jax.lax expression pulls the "
+                       "value to host (crashes under jit); use jnp or fetch "
+                       "via jax.device_get at the eager boundary")
+
+        # JS003: timing calls collected per enclosing function
+        if (d is not None and len(d) == 2 and d[0] == "time"
+                and d[1] in _TIME_FNS and "JS003" in self.rules):
+            self.fn_stack[-1]["timing"].append(
+                (node.lineno, node.col_offset, d[1]))
+        if (d is not None and d[-1] in _FENCE_NAMES) or (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _FENCE_NAMES):
+            self.fn_stack[-1]["fenced"] = True
+
+        # JS004: host I/O inside loop bodies
+        if self.loop_depth > 0:
+            if isinstance(node.func, ast.Name) and node.func.id == "print":
+                self._emit("JS004", node,
+                           "print() inside a loop body in library code — "
+                           "syncs and serializes the device stream every "
+                           "iteration; emit repro.obs counters/spans instead")
+            elif (d is not None and len(d) == 2 and d[0] in _LOG_ROOTS
+                  and d[1] in _LOG_METHODS):
+                self._emit("JS004", node,
+                           f"{'.'.join(d)}() inside a loop body in library "
+                           f"code; emit repro.obs counters/spans instead")
+
+        # JS005: nondeterminism sources
+        if d is not None:
+            if len(d) == 2 and d[0] == "random" and d[1] in _STDLIB_RANDOM:
+                self._emit("JS005", node,
+                           f"stdlib random.{d[1]}() is unseeded global state "
+                           f"— results are irreproducible; thread a "
+                           f"jax.random key or np.random.SeedSequence")
+            elif (len(d) == 3 and d[0] in ("np", "numpy")
+                  and d[1] == "random" and d[2] in _NP_RANDOM_LEGACY):
+                self._emit("JS005", node,
+                           f"legacy global np.random.{d[2]}() — global-state "
+                           f"RNG breaks reproducibility and shard "
+                           f"invariance; use np.random.default_rng(seed)")
+            elif (len(d) == 3 and d[0] in ("np", "numpy")
+                  and d[1] == "random" and d[2] == "default_rng"
+                  and not node.args and not node.keywords):
+                self._emit("JS005", node,
+                           "np.random.default_rng() without a seed is "
+                           "entropy-seeded; pass a seed or SeedSequence")
+
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# suppression handling
+# ---------------------------------------------------------------------------
+
+def _parse_suppressions(source: str, path: str):
+    """{line: (rules, reason)} plus JS000 findings for malformed ones."""
+    supp: Dict[int, Tuple[Set[str], str]] = {}
+    bad: List[Finding] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            if _HINT_RE.search(text):
+                bad.append(Finding(path, i, 0, "JS000",
+                                   "malformed repro-lint suppression "
+                                   "(syntax: `# repro-lint"
+                                   ": disable=JSxxx -- reason`)"))
+            continue
+        rules = {r.strip().upper() for r in m.group(1).split(",") if r.strip()}
+        reason = (m.group(2) or "").strip()
+        unknown = sorted(r for r in rules
+                         if r not in RULES or r == "JS000"
+                         or not r.startswith("JS"))
+        if unknown:
+            bad.append(Finding(path, i, 0, "JS000",
+                               f"suppression names unknown/unsuppressible "
+                               f"rule(s) {unknown}"))
+            rules -= set(unknown)
+        if not reason:
+            bad.append(Finding(path, i, 0, "JS000",
+                               "suppression without a reason string — every "
+                               "disable must say why (`-- <reason>`)"))
+            continue  # a reasonless suppression does not suppress
+        if rules:
+            lines = [i]
+            # a comment-only line covers the following statement line too
+            if text.lstrip().startswith("#"):
+                lines.append(i + 1)
+            for ln in lines:
+                prev = supp.get(ln, (set(), ""))
+                supp[ln] = (prev[0] | rules, reason or prev[1])
+    return supp, bad
+
+
+def lint_source(source: str, path: str,
+                rules: Optional[Set[str]] = None) -> List[Finding]:
+    """Lint one file's source. ``rules`` overrides the path-derived scope
+    (used by the fixture tests to force the jit-scope rule set)."""
+    rules = rules if rules is not None else scope_rules(path)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, e.offset or 0, "JS000",
+                        f"file does not parse: {e.msg}")]
+    visitor = _Visitor(path, rules)
+    visitor.visit(tree)
+    supp, findings = _parse_suppressions(source, path)
+    for f in visitor.raw:
+        s = supp.get(f.line)
+        if s and f.rule in s[0]:
+            findings.append(dataclasses.replace(f, suppressed=True,
+                                                reason=s[1]))
+        else:
+            findings.append(f)
+    return sorted(findings, key=lambda f: (f.line, f.col, f.rule))
+
+
+def lint_file(path: str, rules: Optional[Set[str]] = None) -> List[Finding]:
+    with open(path, "r") as fh:
+        return lint_source(fh.read(), path, rules)
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    """Lint every ``.py`` under the given files/directories."""
+    findings: List[Finding] = []
+    for root in paths:
+        if os.path.isfile(root):
+            findings.extend(lint_file(root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    findings.extend(lint_file(os.path.join(dirpath, fn)))
+    return findings

@@ -1,0 +1,330 @@
+"""Pass 3 — pytree & static-argument hygiene (DESIGN.md §12.3).
+
+Two bug classes, both found the hard way in earlier PRs:
+
+* **Pytree aux defects.** Every ``register_pytree_node_class`` type crosses
+  jit boundaries; its aux data becomes part of the *treedef*, which jax
+  hashes and compares to decide whether a cached compilation can be reused.
+  Aux that is unhashable crashes at the first jit call; aux that contains
+  arrays retraces on every value change; aux whose equality is not stable
+  across reconstruction silently defeats the compilation cache. This pass
+  flattens/unflattens an exemplar of every registered pytree in ``src/repro``
+  and certifies: round-trip identity (same leaves, same treedef), hashable
+  and array-free aux, and treedef equality across two independently
+  constructed identical exemplars.
+
+  Discovery is static (AST scan for the decorator), so a newly registered
+  pytree with no exemplar in the registry is itself a finding — the check
+  cannot silently lose coverage.
+
+* **Static-arg aliasing (the PR-3 bug class).** Types used as jit
+  static arguments or plan-cache key components (``DistInfo``,
+  ``PlannerConfig``, ``AxisCtx``, ``OperandInfo``) are compared by
+  ``__eq__``/``__hash__``. If equality ignores a semantically meaningful
+  field, two distinct configurations alias to one cached artifact — PR 3's
+  mesh-aliasing bug was exactly this (same axis *names*, different mesh
+  *sizes*, one shared plan). For each static type this pass varies every
+  field of a base instance one at a time and certifies each variant
+  compares unequal to the base (and that equal instances hash equal).
+
+``--pytree-module`` loads an extra module exposing ``PYTREE_EXEMPLARS``
+(a list of pytree instances or zero-arg factories) and runs the same aux
+checks on them — the fixture hook the CI tripwire test uses to prove a
+corrupted pytree fails the run.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.lint import Finding
+
+# ---------------------------------------------------------------------------
+# static discovery of registered pytrees
+# ---------------------------------------------------------------------------
+
+_DECORATOR = "register_pytree_node_class"
+
+
+def discover_registered(src_root: str) -> List[Tuple[str, str]]:
+    """(module, classname) for every ``@register_pytree_node_class`` class
+    under ``src_root`` (AST-level — nothing is imported)."""
+    out: List[Tuple[str, str]] = []
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, src_root)[:-3].replace(os.sep, ".")
+            if rel.endswith(".__init__"):
+                rel = rel[: -len(".__init__")]
+            with open(path) as fh:
+                try:
+                    tree = ast.parse(fh.read(), filename=path)
+                except SyntaxError:
+                    continue
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.ClassDef):
+                    continue
+                for dec in node.decorator_list:
+                    name = dec.attr if isinstance(dec, ast.Attribute) else \
+                        dec.id if isinstance(dec, ast.Name) else None
+                    if name == _DECORATOR:
+                        out.append((rel, node.name))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# exemplar registry
+# ---------------------------------------------------------------------------
+
+def _exemplar_sparse():
+    from repro.core.sparse_tensor import SparseTensor
+    idx = np.stack([(np.arange(8) * (d + 3)) % s
+                    for d, s in enumerate((6, 4, 8))], axis=1).astype(np.int32)
+    vals = np.linspace(0.5, 1.5, 8, dtype=np.float32)
+    return SparseTensor.from_coo(idx, vals, (6, 4, 8))
+
+
+def _exemplar_ccsr():
+    from repro.sparse.ccsr import build_ccsr
+    return build_ccsr(_exemplar_sparse().sort_by_mode(0), 0)
+
+
+def _exemplar_buckets():
+    buckets = _exemplar_sparse().row_buckets(0, 4)
+    assert buckets is not None, "concrete indices must yield a bucket view"
+    return buckets
+
+
+# module.Class -> zero-arg factory building a representative instance
+EXEMPLARS: Dict[str, object] = {
+    "core.sparse_tensor.SparseTensor": _exemplar_sparse,
+    "sparse.ccsr.CCSRView": _exemplar_ccsr,
+    "sparse.ccsr.RowBlockBuckets": _exemplar_buckets,
+}
+
+
+# ---------------------------------------------------------------------------
+# aux-data hygiene checks
+# ---------------------------------------------------------------------------
+
+def _is_arraylike(x) -> bool:
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def _walk_aux(aux):
+    yield aux
+    if isinstance(aux, (tuple, list)):
+        for item in aux:
+            yield from _walk_aux(item)
+    elif isinstance(aux, dict):
+        for item in aux.values():
+            yield from _walk_aux(item)
+
+
+def check_exemplar(name: str, factory) -> List[Finding]:
+    import jax
+
+    findings: List[Finding] = []
+
+    def bad(msg):
+        findings.append(Finding("pytrees", 0, 0, "PT001", f"[{name}] {msg}"))
+
+    try:
+        obj = factory() if callable(factory) else factory
+    except Exception as e:
+        bad(f"exemplar construction failed: {type(e).__name__}: {e}")
+        return findings
+
+    try:
+        leaves, treedef = jax.tree_util.tree_flatten(obj)
+    except Exception as e:
+        bad(f"tree_flatten failed: {type(e).__name__}: {e}")
+        return findings
+
+    # treedef (which embeds the aux) must be hashable — jit requires it
+    try:
+        hash(treedef)
+    except TypeError as e:
+        bad(f"treedef (aux data) is unhashable — first jit call would "
+            f"crash: {e}")
+        return findings
+
+    # aux must be hashable in its own right — the plan cache and jit
+    # static-argument keys hash aux-bearing tuples directly (jaxlib's
+    # treedef hash ignores custom-node aux, so hash(treedef) is no proxy)
+    if hasattr(obj, "tree_flatten"):
+        _, aux = obj.tree_flatten()
+        try:
+            hash(aux)
+        except TypeError as e:
+            bad(f"aux data is unhashable ({e}) — cache keys and jit "
+                f"static-arg tuples embedding it would crash")
+        # and must not carry arrays: array aux forces a retrace per value
+        for item in _walk_aux(aux):
+            if _is_arraylike(item):
+                bad(f"aux data contains an array ({type(item).__name__}, "
+                    f"shape {getattr(item, 'shape', '?')}) — arrays belong "
+                    f"in the leaves; aux retraces per value")
+
+    # round trip: unflatten(flatten(x)) must re-flatten identically
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    leaves2, treedef2 = jax.tree_util.tree_flatten(back)
+    try:
+        differs = treedef2 != treedef
+    except Exception as e:  # array-valued aux: `==` is elementwise/ambiguous
+        bad(f"treedef comparison raises ({type(e).__name__}: {e}) — aux "
+            f"data must compare by plain bool equality")
+        return findings
+    if differs:
+        bad("flatten∘unflatten does not round-trip: treedef changed")
+    if len(leaves2) != len(leaves) or any(
+            l1 is not l2 and not np.array_equal(np.asarray(l1),
+                                                np.asarray(l2))
+            for l1, l2 in zip(leaves, leaves2)):
+        bad("flatten∘unflatten does not round-trip: leaves changed")
+
+    # equality stability: an independently built identical exemplar must
+    # produce an equal treedef with an equal hash (else the jit cache and
+    # the plan cache silently miss on every reconstruction)
+    if callable(factory):
+        try:
+            obj2 = factory()
+        except Exception as e:
+            bad(f"second exemplar construction failed: {e}")
+            return findings
+        _, treedef3 = jax.tree_util.tree_flatten(obj2)
+        try:
+            unstable = treedef3 != treedef or hash(treedef3) != hash(treedef)
+        except Exception as e:
+            bad(f"treedef comparison across constructions raises "
+                f"({type(e).__name__}) — aux data must compare by plain "
+                f"bool equality")
+            unstable = False
+        if unstable:
+            bad("aux equality is not construction-stable: two identical "
+                "exemplars flatten to unequal treedefs — every "
+                "reconstruction would force a fresh trace")
+
+    # identity tree_map must preserve structure (catches unflatten ctors
+    # that recompute/validate and perturb aux)
+    mapped = jax.tree_util.tree_map(lambda x: x, obj)
+    if jax.tree_util.tree_structure(mapped) != treedef:
+        bad("identity tree_map changes the treedef")
+    return findings
+
+
+def check_pytrees(src_root: str,
+                  extra_module: Optional[str] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    discovered = discover_registered(src_root)
+    for mod, cls in discovered:
+        key = f"{mod}.{cls}"
+        if key not in EXEMPLARS:
+            findings.append(Finding(
+                "pytrees", 0, 0, "PT001",
+                f"registered pytree {key} has no exemplar in "
+                f"analysis.pytree_check.EXEMPLARS — add one so its aux "
+                f"hygiene is certified"))
+    for key, factory in EXEMPLARS.items():
+        findings.extend(check_exemplar(key, factory))
+    if extra_module:
+        m = importlib.import_module(extra_module)
+        for i, ex in enumerate(getattr(m, "PYTREE_EXEMPLARS", ())):
+            findings.extend(check_exemplar(f"{extra_module}[{i}]", ex))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# static-argument aliasing (PT002)
+# ---------------------------------------------------------------------------
+
+def _static_type_grids():
+    """(typename, base instance, [(field, variant instance), ...]) for every
+    type used as a jit static argument or plan-cache key component. Each
+    variant differs from base in exactly one semantically meaningful field."""
+    import dataclasses as dc
+
+    from repro.core.distributed import AxisCtx
+    from repro.planner.config import PlannerConfig
+    from repro.planner.ir import DistInfo, OperandInfo
+
+    grids = []
+
+    base = DistInfo()
+    grids.append(("planner.ir.DistInfo", base, [
+        ("data_size", dc.replace(base, data_size=2)),
+        ("data_size", dc.replace(base, data_size=4)),   # PR-3: sizes, not
+        ("model_size", dc.replace(base, model_size=2)),  # just names
+        ("rowsharded", dc.replace(base, rowsharded=True)),
+    ]))
+
+    base = PlannerConfig()
+    grids.append(("planner.config.PlannerConfig", base, [
+        ("block_rows", dc.replace(base, block_rows=16)),
+        ("h_slices", dc.replace(base, h_slices=2)),
+    ]))
+
+    base = AxisCtx()
+    grids.append(("core.distributed.AxisCtx", base, [
+        ("data", dc.replace(base, data="data")),
+        ("data", dc.replace(base, data=("data", "expert"))),
+        ("model", dc.replace(base, model="model")),
+    ]))
+
+    base = OperandInfo("ijk", True, (6, 4, 8), 8, 8, "float32", None, None)
+    grids.append(("planner.ir.OperandInfo", base, [
+        ("term", dc.replace(base, term="jik")),
+        ("shape", dc.replace(base, shape=(6, 4, 10))),
+        ("cap", dc.replace(base, cap=16)),
+        ("nnz", dc.replace(base, nnz=4)),
+        ("dtype", dc.replace(base, dtype="bfloat16")),
+        ("nnz_rows", dc.replace(base, nnz_rows=(3, 4, 5))),
+    ]))
+    return grids
+
+
+def check_static_args() -> List[Finding]:
+    findings: List[Finding] = []
+
+    def bad(msg):
+        findings.append(Finding("static-args", 0, 0, "PT002", msg))
+
+    for name, base, variants in _static_type_grids():
+        try:
+            h0 = hash(base)
+        except TypeError as e:
+            bad(f"{name} is unhashable — unusable as a jit static arg or "
+                f"cache-key component: {e}")
+            continue
+        if hash(base) != h0 or base != base:
+            bad(f"{name} hash/eq is unstable on the same instance")
+        seen = {base: "base"}
+        for field, variant in variants:
+            try:
+                hash(variant)
+            except TypeError as e:
+                bad(f"{name} variant ({field}) is unhashable: {e}")
+                continue
+            if variant == base:
+                bad(f"{name}: changing {field!r} produces an instance that "
+                    f"compares EQUAL to the base — distinct configs would "
+                    f"alias one cached plan/compilation (PR-3 mesh-aliasing "
+                    f"bug class)")
+            for other, olabel in seen.items():
+                if variant == other and olabel != "base":
+                    bad(f"{name}: variants {field!r} and {olabel!r} alias")
+            seen[variant] = field
+    return findings
+
+
+def run(repo_root: str = ".",
+        extra_module: Optional[str] = None) -> List[Finding]:
+    src_root = os.path.join(repo_root, "src", "repro")
+    return check_pytrees(src_root, extra_module) + check_static_args()

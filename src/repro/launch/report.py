@@ -1,5 +1,5 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON records
-emitted by ``repro.launch.dryrun``, and the in-repo perf trajectory.
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from previously committed
+dry-run JSON records, and the in-repo perf trajectory.
 
     PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
     PYTHONPATH=src python -m repro.launch.report --perf   # writes PERF.md

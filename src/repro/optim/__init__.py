@@ -1,6 +1,3 @@
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
-from repro.optim.schedule import cosine_warmup
-from repro.optim.compression import (compressed_psum, ef_state_init)
+from repro.optim.compression import compressed_psum, ef_state_init
 
-__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_warmup",
-           "compressed_psum", "ef_state_init"]
+__all__ = ["compressed_psum", "ef_state_init"]

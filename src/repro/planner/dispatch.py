@@ -75,12 +75,15 @@ def _reorder(res: jax.Array, canon: str, out: str) -> jax.Array:
 def _densified_einsum(ir: pir.ContractionIR, st: SparseTensor,
                       dense_ops: Sequence) -> jax.Array:
     """Dense fallback preserving the original operand order (the sparse
-    operand need not be first)."""
+    operand need not be first). ``optimize="greedy"``: jnp.einsum's default
+    exhaustive path search is exponential in operand count and hangs at
+    trace time on order-5 CG matvecs (11 operands); greedy is near-optimal
+    for these factor-matrix chains and linear-time."""
     args: List = [None] * len(ir.operands)
     args[ir.sparse_pos] = st.todense()
     for pos, op in zip(ir.dense_positions, dense_ops):
         args[pos] = op
-    return jnp.einsum(ir.expr, *args)
+    return jnp.einsum(ir.expr, *args, optimize="greedy")
 
 
 # ---------------------------------------------------------------------------

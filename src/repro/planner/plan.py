@@ -130,7 +130,8 @@ def plan_contraction(expr: str, operands: Sequence,
                      autotune: bool = False,
                      ctx: AxisCtx = LOCAL,
                      rowsharded: bool = False,
-                     config: Optional[PlannerConfig] = None) -> Plan:
+                     config: Optional[PlannerConfig] = None,
+                     validate: bool = False) -> Plan:
     """Plan (or fetch the cached plan for) one einsum call.
 
     ``path`` forces a specific candidate (validated against the IR);
@@ -139,6 +140,14 @@ def plan_contraction(expr: str, operands: Sequence,
     the communication terms its axis sizes imply and dispatch applies the
     matching collectives; ``rowsharded`` declares the dense factors'
     ROWS sharded over the data axes (paper Fig. 2).
+
+    ``validate=True`` certifies, abstractly (``jax.eval_shape``, no kernel
+    runs), that every candidate path of this call produces identical output
+    avals *before* the plan may enter the cache — the §5.3 all-paths-agree
+    contract, enforced at the exact point a violation would otherwise be
+    memoized (DESIGN.md §12.2). Raises
+    :class:`repro.analysis.contracts.PlanContractError` on disagreement;
+    cache hits are already-certified and skip the check.
     """
     ctx = ctx if ctx is not None else LOCAL
     config = config if config is not None else default_config()
@@ -155,6 +164,10 @@ def plan_contraction(expr: str, operands: Sequence,
     ir = pir.build_ir(expr, operands, dist=dist)
     ranking = pcost.rank_paths(ir)
     candidates = tuple(c.path for c in ranking)
+    if validate and not _any_tracer(operands):
+        # deferred import: analysis depends on the planner, never the reverse
+        from repro.analysis.contracts import certify_candidates
+        certify_candidates(ir, candidates, operands, ctx, config)
     if path is not None:
         # a forced path makes autotuning moot — the plan is final
         if path not in candidates:

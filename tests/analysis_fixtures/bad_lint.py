@@ -1,0 +1,73 @@
+# Known-BAD fixture for the jit-safety linter (tests/test_analysis.py).
+# Every block below must be flagged by exactly the rule named in its comment
+# when linted with the jit-reachable rule set. This file is never imported.
+import logging
+import random
+import time
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+log = logging.getLogger(__name__)
+
+
+def js001_if(x):
+    if jnp.sum(x) > 0:            # JS001: Python `if` on a traced value
+        return x
+    return -x
+
+
+def js001_while(x):
+    while jnp.linalg.norm(x) > 1e-3:   # JS001: `while` on a traced value
+        x = x * 0.5
+    return x
+
+
+def js001_ternary(x):
+    return x if jnp.any(x) else -x     # JS001: ternary on a traced value
+
+
+def js001_assert(x):
+    assert jnp.all(x > 0)              # JS001: assert on a traced value
+    return x
+
+
+def js002_item(x):
+    return jnp.sum(x).item()           # JS002: .item() host sync
+
+
+def js002_float(x):
+    return float(jnp.sum(x))           # JS002: float() of traced expr
+
+
+def js002_asarray(x):
+    return np.asarray(jnp.exp(x))      # JS002: np.asarray of traced expr
+
+
+def js003_unfenced(f, x):
+    t0 = time.perf_counter()           # JS003: no fence in this function
+    f(x)
+    return time.perf_counter() - t0    # JS003
+
+
+def js004_print_loop(xs):
+    for x in xs:
+        print("step", x)               # JS004: print inside loop body
+
+
+def js004_log_loop(xs):
+    for x in xs:
+        log.info("step %s", x)         # JS004: logging inside loop body
+
+
+def js005_stdlib():
+    return random.random()             # JS005: stdlib global RNG
+
+
+def js005_np_legacy():
+    return np.random.rand(3)           # JS005: legacy global np RNG
+
+
+def js005_seedless():
+    return np.random.default_rng()     # JS005: entropy-seeded generator

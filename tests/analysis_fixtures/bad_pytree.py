@@ -1,0 +1,68 @@
+"""Deliberately corrupted pytree fixtures for ``repro-lint --pytrees
+--pytree-module bad_pytree`` (run with this directory on PYTHONPATH).
+
+Each exemplar violates one aux-hygiene contract; the pytree pass must turn
+every one of them into a finding (the ISSUE acceptance tripwire).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class UnhashableAux:
+    """Aux data is a list — hashing the treedef raises at the first jit."""
+
+    def __init__(self, values, meta):
+        self.values = values
+        self.meta = meta
+
+    def tree_flatten(self):
+        return (self.values,), [self.meta]          # list aux: unhashable
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+class ArrayAux:
+    """Aux data smuggles an array — retraces on every value change."""
+
+    def __init__(self, values, lookup):
+        self.values = values
+        self.lookup = lookup
+
+    def tree_flatten(self):
+        return (self.values,), (self.lookup,)       # array in aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+class UnstableAux:
+    """Aux equality is identity-based — every reconstruction looks new, so
+    the jit cache misses on each rebuild."""
+
+    class _Token:
+        pass  # default object eq/hash: identity
+
+    def __init__(self, values, token=None):
+        self.values = values
+        self.token = token if token is not None else self._Token()
+
+    def tree_flatten(self):
+        return (self.values,), (self.token,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+PYTREE_EXEMPLARS = [
+    lambda: UnhashableAux(jnp.zeros(3), {"shape": 3}),
+    lambda: ArrayAux(jnp.zeros(3), np.arange(3)),
+    lambda: UnstableAux(jnp.zeros(3)),
+]

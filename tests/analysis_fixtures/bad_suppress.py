@@ -1,0 +1,23 @@
+# Suppression-syntax fixture: mixes valid, reasonless, and unknown-rule
+# suppressions (tests/test_analysis.py). Never imported.
+import time
+
+
+def reasonless(f, x):
+    t0 = time.perf_counter()  # repro-lint: disable=JS003
+    f(x)
+    return time.perf_counter() - t0  # repro-lint: disable=JS003 -- fixture: reasonless above stays blocking
+
+
+def unknown_rule(f, x):
+    t0 = time.perf_counter()  # repro-lint: disable=JS999 -- no such rule
+    f(x)
+    t1 = time.perf_counter()  # repro-lint: disable=JS003 -- fixture: valid suppression
+    return t1 - t0
+
+
+def comment_line_covers_next(f, x):
+    # repro-lint: disable=JS003 -- fixture: comment-only line covers next line
+    t0 = time.perf_counter()
+    f(x)
+    return t0

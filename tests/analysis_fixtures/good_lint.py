@@ -1,0 +1,55 @@
+# Known-GOOD twin of bad_lint.py: the same intents expressed with jit-safe /
+# fenced / seeded idioms. The linter must emit ZERO findings on this file
+# even under the strict jit-reachable rule set. Never imported.
+import time
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+
+def good_branch(x):
+    return jnp.where(jnp.sum(x) > 0, x, -x)          # jnp.where, not `if`
+
+
+def good_loop(x):
+    return jax.lax.while_loop(lambda s: s[1] > 1e-3,
+                              lambda s: (s[0] * 0.5, s[1] * 0.5),
+                              (x, 1.0))[0]
+
+
+def good_host_branch(n: int, x):
+    if n > 3:                # branching on a static Python value is fine
+        return x
+    return -x
+
+
+def good_fetch(x):
+    return jax.device_get(jnp.sum(x))     # explicit eager-boundary fetch
+
+
+def good_timing(f, x):
+    out = f(x)
+    jax.block_until_ready(out)            # fenced before reading the clock
+    t0 = time.perf_counter()
+    jax.block_until_ready(f(x))
+    return time.perf_counter() - t0
+
+
+def good_timing_closure(f, x):
+    def run():
+        return jax.block_until_ready(f(x))
+    run()
+    t0 = time.perf_counter()              # fence lives in the closure above
+    run()
+    return time.perf_counter() - t0
+
+
+def good_print(xs):
+    total = sum(xs)
+    print("done:", total)                 # print outside any loop is fine
+
+
+def good_rng():
+    rng = np.random.default_rng(1234)     # seeded generator
+    return rng.standard_normal(3)

@@ -1,0 +1,374 @@
+"""Tests for the static-analysis subsystem (``repro.analysis``).
+
+Every lint rule is exercised against a known-bad fixture snippet it must
+flag and a known-good twin it must not; the contract checker and pytree
+pass are exercised both clean (repo passes) and corrupted (the deliberate
+fault hooks must fail the run — the ISSUE acceptance tripwire).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import contracts, deadcode, lint, pytree_check
+from repro.analysis.cli import main as cli_main
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "analysis_fixtures")
+JIT_RULES = {"JS001", "JS002", "JS003", "JS004", "JS005"}
+
+
+def lint_fixture(name, rules=JIT_RULES):
+    return lint.lint_file(os.path.join(FIXTURES, name), rules=rules)
+
+
+def rules_hit(findings, suppressed=False):
+    return {f.rule for f in findings if f.suppressed == suppressed}
+
+
+# ---------------------------------------------------------------------------
+# pass 1: lint rules, bad fixtures vs good twins
+# ---------------------------------------------------------------------------
+
+class TestLintRules:
+    def test_bad_fixture_hits_every_rule(self):
+        assert rules_hit(lint_fixture("bad_lint.py")) == JIT_RULES
+
+    def test_good_twin_is_clean(self):
+        assert lint_fixture("good_lint.py") == []
+
+    @pytest.mark.parametrize("snippet,rule", [
+        ("def f(x):\n    if jnp.sum(x) > 0:\n        return x\n", "JS001"),
+        ("def f(x):\n    while jnp.any(x):\n        x = x * 0.5\n", "JS001"),
+        ("def f(x):\n    return x if jnp.any(x) else -x\n", "JS001"),
+        ("def f(x):\n    assert jnp.all(x)\n", "JS001"),
+        ("def f(x):\n    return jnp.sum(x).item()\n", "JS002"),
+        ("def f(x):\n    return float(jnp.sum(x))\n", "JS002"),
+        ("def f(x):\n    return int(jax.lax.psum(x, 'd'))\n", "JS002"),
+        ("def f(x):\n    return np.asarray(jnp.exp(x))\n", "JS002"),
+        ("import time\ndef f(g):\n    t = time.perf_counter()\n    g()\n"
+         "    return time.perf_counter() - t\n", "JS003"),
+        ("def f(xs):\n    for x in xs:\n        print(x)\n", "JS004"),
+        ("def f(xs):\n    for x in xs:\n        logging.info('%s', x)\n",
+         "JS004"),
+        ("def f():\n    return random.random()\n", "JS005"),
+        ("def f():\n    return np.random.rand(3)\n", "JS005"),
+        ("def f():\n    return np.random.default_rng()\n", "JS005"),
+    ])
+    def test_bad_snippet_flagged(self, snippet, rule):
+        findings = lint.lint_source(snippet, "snippet.py", rules=JIT_RULES)
+        assert rule in rules_hit(findings)
+
+    @pytest.mark.parametrize("snippet", [
+        "def f(x):\n    return jnp.where(jnp.sum(x) > 0, x, -x)\n",
+        "def f(n, x):\n    if n > 3:\n        return x\n    return -x\n",
+        # fence via jax.block_until_ready in the same function
+        "import time\ndef f(g):\n    jax.block_until_ready(g())\n"
+        "    t = time.perf_counter()\n    jax.block_until_ready(g())\n"
+        "    return time.perf_counter() - t\n",
+        # fence inside a nested timing closure (planner autotune idiom)
+        "import time\ndef f(g):\n"
+        "    def run():\n        return jax.block_until_ready(g())\n"
+        "    run()\n    t = time.perf_counter()\n    run()\n"
+        "    return time.perf_counter() - t\n",
+        "def f(xs):\n    print('done', sum(xs))\n",
+        "def f():\n    return np.random.default_rng(7).standard_normal(3)\n",
+    ])
+    def test_good_snippet_clean(self, snippet):
+        assert lint.lint_source(snippet, "snippet.py", rules=JIT_RULES) == []
+
+    def test_np_asarray_of_attribute_not_flagged(self):
+        # np.asarray(st.indices) is the idiomatic eager fetch of a concrete
+        # field — only jnp/jax.lax *calls* inside the argument are flagged
+        src = "def f(st):\n    return np.asarray(st.indices)\n"
+        assert lint.lint_source(src, "s.py", rules=JIT_RULES) == []
+
+
+class TestScopes:
+    def test_jit_prefixes_get_all_rules(self):
+        assert lint.scope_rules("src/repro/planner/dispatch.py") == JIT_RULES
+        assert lint.scope_rules("src/repro/kernels/mttkrp.py") == JIT_RULES
+
+    def test_data_layer_exempts_nondeterminism(self):
+        rules = lint.scope_rules("src/repro/data/streaming.py")
+        assert "JS005" not in rules and "JS003" in rules
+
+    def test_host_layers_keep_timing_and_rng(self):
+        assert lint.scope_rules("src/repro/launch/complete.py") == \
+            {"JS003", "JS005"}
+
+    def test_trace_module_timing_exempt(self):
+        assert "JS003" not in lint.scope_rules("src/repro/obs/trace.py")
+
+    def test_benchmarks_scope(self):
+        assert lint.scope_rules("benchmarks/bench_planner.py") == \
+            {"JS003", "JS005"}
+
+
+class TestSuppressions:
+    def test_fixture(self):
+        findings = lint_fixture("bad_suppress.py", rules={"JS003"})
+        blocking = [f for f in findings if not f.suppressed]
+        suppressed = [f for f in findings if f.suppressed]
+        # reasonless + unknown-rule suppressions each yield a JS000, and the
+        # reasonless one does NOT suppress its JS003
+        assert {f.rule for f in blocking} == {"JS000", "JS003"}
+        assert sum(f.rule == "JS000" for f in blocking) == 2
+        assert sum(f.rule == "JS003" for f in blocking) >= 2
+        # the valid suppressions took effect, with their reasons recorded
+        assert {f.rule for f in suppressed} == {"JS003"}
+        assert all(f.reason for f in suppressed)
+
+    def test_comment_only_line_covers_next_line(self):
+        src = ("import time\n"
+               "def f(g):\n"
+               "    # repro-lint: disable=JS003 -- host-only accounting\n"
+               "    t = time.perf_counter()\n"
+               "    return t\n")
+        findings = lint.lint_source(src, "s.py", rules={"JS003"})
+        assert findings and all(f.suppressed for f in findings)
+
+    def test_js000_is_never_suppressible(self):
+        src = "x = 1  # repro-lint: disable=JS000 -- please\n"
+        findings = lint.lint_source(src, "s.py", rules=JIT_RULES)
+        assert [f.rule for f in findings if not f.suppressed] == ["JS000"]
+
+    def test_repo_lints_clean_with_reasons(self):
+        findings = lint.lint_paths([os.path.join(REPO, "src", "repro"),
+                                    os.path.join(REPO, "benchmarks")])
+        blocking = [f.format() for f in findings if not f.suppressed]
+        assert blocking == []
+        assert all(f.reason for f in findings if f.suppressed)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: planner contracts
+# ---------------------------------------------------------------------------
+
+class TestContractSweep:
+    def test_grid_covers_all_families_and_orders(self):
+        cases = contracts.iter_cases()
+        fams = {c.family for c in cases}
+        assert fams == set(contracts.FAMILIES) and len(fams) == 7
+        orders = {len(c.st.shape) for c in cases if c.family == "tttp"}
+        assert orders == {3, 4, 5}
+
+    def test_grid_covers_distributed_variants(self):
+        cases = contracts.iter_cases(orders=(3,))
+        names = {c.name for c in cases}
+        assert "tttp/o3/rowsharded" in names
+        assert "mttkrp/o3/model" in names
+        assert "cg_matvec/o3/data" in names
+
+    def test_path_agreement_order3_clean(self):
+        assert contracts.check_path_agreement(
+            contracts.iter_cases(orders=(3,))) == []
+
+    def test_fused_cg_path_is_certified_not_fallback(self):
+        # the closure-over-concrete-indices design must let the bucketed
+        # fused kernel trace (tracer indices would silently fall back)
+        case = [c for c in contracts.iter_cases(orders=(3,))
+                if c.name == "cg_matvec/o3/local"][0]
+        assert case.st.row_buckets(0, case.config.block_rows) is not None
+        contracts.path_avals(case, "fused")
+
+    def test_corrupt_path_fails_sweep(self):
+        contracts.set_corrupt("all_at_once")
+        try:
+            findings = contracts.check_path_agreement(
+                contracts.iter_cases(orders=(3,), families=("mttkrp",)))
+        finally:
+            contracts.set_corrupt(None)
+        assert findings and all(f.rule == "CT001" for f in findings)
+
+    def test_cost_invariants_clean(self):
+        assert contracts.check_cost_invariants(
+            contracts.iter_cases(orders=(3, 4))) == []
+
+    def test_cache_keys_clean(self):
+        assert contracts.check_cache_keys() == []
+
+    def test_dist_sizes_distinguish_cache_keys(self):
+        # PR-3 mesh-aliasing class: same axis names, different sizes
+        from repro.core.distributed import AxisCtx
+        from repro.planner import ir as pir
+        from repro.planner import plan as pplan
+        from repro.planner.config import PlannerConfig
+        ctx = AxisCtx(data="data")
+        k2 = pplan._signature("ijk,jr,kr->ir", (), None, ctx,
+                              pir.DistInfo(2, 1, False), PlannerConfig())
+        k4 = pplan._signature("ijk,jr,kr->ir", (), None, ctx,
+                              pir.DistInfo(4, 1, False), PlannerConfig())
+        assert k2 != k4
+
+
+class TestValidateHook:
+    def _operands(self):
+        from repro.core.sparse_tensor import SparseTensor
+        idx = np.stack([(np.arange(8) * (d + 3)) % s
+                        for d, s in enumerate((6, 4, 8))],
+                       axis=1).astype(np.int32)
+        st = SparseTensor.from_coo(
+            idx, np.linspace(0.5, 1.5, 8, dtype=np.float32), (6, 4, 8))
+        return [st, np.ones((4, 4), np.float32), np.ones((8, 4), np.float32)]
+
+    def test_validate_clean_plan(self):
+        from repro.planner.plan import clear_plan_cache, plan_contraction
+        clear_plan_cache()
+        plan = plan_contraction("ijk,jr,kr->ir", self._operands(),
+                                validate=True)
+        assert plan.path in plan.candidates
+
+    def test_validate_raises_on_corruption(self):
+        from repro.planner.plan import clear_plan_cache, plan_contraction
+        clear_plan_cache()
+        contracts.set_corrupt("kr_first")
+        try:
+            with pytest.raises(contracts.PlanContractError):
+                plan_contraction("ijk,jr,kr->ir", self._operands(),
+                                 validate=True)
+        finally:
+            contracts.set_corrupt(None)
+            clear_plan_cache()
+
+    def test_certify_candidates_direct(self):
+        from repro.planner import cost as pcost
+        from repro.planner import ir as pir
+        from repro.core.distributed import LOCAL
+        from repro.planner.config import default_config
+        ops = self._operands()
+        ir = pir.build_ir("ijk,jr,kr->ir", ops)
+        contracts.certify_candidates(
+            ir, [c.path for c in pcost.rank_paths(ir)], ops, LOCAL,
+            default_config())
+
+
+# ---------------------------------------------------------------------------
+# pass 3: pytrees and static args
+# ---------------------------------------------------------------------------
+
+class TestPytrees:
+    def test_repo_pytrees_clean(self):
+        src = os.path.join(REPO, "src", "repro")
+        assert pytree_check.check_pytrees(src) == []
+
+    def test_every_registered_pytree_has_exemplar(self):
+        src = os.path.join(REPO, "src", "repro")
+        discovered = {f"{m}.{c}"
+                      for m, c in pytree_check.discover_registered(src)}
+        assert discovered  # SparseTensor/CCSRView/RowBlockBuckets at least
+        assert discovered <= set(pytree_check.EXEMPLARS)
+
+    def test_corrupted_pytrees_detected(self):
+        sys.path.insert(0, FIXTURES)
+        try:
+            import bad_pytree
+            per_exemplar = [
+                pytree_check.check_exemplar(f"bad[{i}]", ex)
+                for i, ex in enumerate(bad_pytree.PYTREE_EXEMPLARS)]
+        finally:
+            sys.path.remove(FIXTURES)
+        # every corrupted exemplar produces at least one PT001 finding
+        assert all(fs and all(f.rule == "PT001" for f in fs)
+                   for fs in per_exemplar)
+
+    def test_static_args_clean(self):
+        assert pytree_check.check_static_args() == []
+
+    def test_static_arg_aliasing_detected(self, monkeypatch):
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True, eq=False)
+        class Lossy:
+            name: str = "axis"
+            size: int = 1
+
+            def __eq__(self, other):   # ignores size: the PR-3 bug shape
+                return isinstance(other, Lossy) and self.name == other.name
+
+            def __hash__(self):
+                return hash(self.name)
+
+        monkeypatch.setattr(
+            pytree_check, "_static_type_grids",
+            lambda: [("Lossy", Lossy(), [("size", Lossy(size=2))])])
+        findings = pytree_check.check_static_args()
+        assert findings and all(f.rule == "PT002" for f in findings)
+        assert any("alias" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# dead-code report
+# ---------------------------------------------------------------------------
+
+class TestDeadcode:
+    def test_repo_has_no_unreachable_modules(self):
+        rep = deadcode.analyze(REPO)
+        assert rep.unreachable == set()
+
+    def test_orphan_module_detected(self, tmp_path):
+        pkg = tmp_path / "src" / "repro"
+        pkg.mkdir(parents=True)
+        (pkg / "__init__.py").write_text("")
+        (pkg / "used.py").write_text("import repro\n")
+        (pkg / "orphan.py").write_text("X = 1\n")
+        rep = deadcode.analyze(str(tmp_path), roots=("repro.used",))
+        assert "repro.orphan" in rep.unreachable
+        assert "repro.used" in rep.product
+
+    def test_main_modules_are_entry_points(self):
+        rep = deadcode.analyze(REPO)
+        assert "repro.analysis.__main__" in rep.product
+
+    def test_deleted_seed_zoo_stays_deleted(self):
+        rep = deadcode.analyze(REPO)
+        assert not any(m.startswith(("repro.models", "repro.configs"))
+                       for m in rep.modules)
+
+
+# ---------------------------------------------------------------------------
+# CLI / CI gate
+# ---------------------------------------------------------------------------
+
+class TestCli:
+    def test_lint_pytrees_deadcode_exit_zero(self, capsys):
+        assert cli_main(["--lint", "--pytrees", "--deadcode",
+                         "--root", REPO]) == 0
+        assert "OK" in capsys.readouterr().out
+
+    def test_contracts_order3_exit_zero(self, capsys):
+        assert cli_main(["--contracts", "--orders", "3",
+                         "--root", REPO]) == 0
+
+    def test_corrupt_exits_nonzero(self, capsys):
+        rc = cli_main(["--contracts", "--orders", "3",
+                       "--corrupt", "all_at_once", "--root", REPO])
+        assert rc == 1
+        assert "CT001" in capsys.readouterr().out
+        assert contracts._CORRUPT_PATH is None   # hook reset afterwards
+
+    def test_bad_pytree_module_exits_nonzero(self, capsys):
+        sys.path.insert(0, FIXTURES)
+        try:
+            rc = cli_main(["--pytrees", "--pytree-module", "bad_pytree",
+                           "--root", REPO])
+        finally:
+            sys.path.remove(FIXTURES)
+        assert rc == 1
+        assert "PT001" in capsys.readouterr().out
+
+    def test_module_entry_point(self):
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO, "src")
+                   + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--deadcode"],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "OK" in out.stdout
+
+    @pytest.mark.slow
+    def test_full_gate_exits_zero(self, capsys):
+        assert cli_main(["--all", "--root", REPO]) == 0
