@@ -1,0 +1,42 @@
+"""Kernel-tile tier (DESIGN.md §13): measured tile sweep on the netflix-ci
+study shape. For each kernel family, times every lattice candidate of the
+planner's autotuner eagerly (Pallas interpret mode on CPU) and emits the
+default-tile config next to the measured winner — the acceptance bound is
+``tuned <= default`` on every shape, which holds by construction because
+the default tile is a lattice member."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.sparse_tensor import SparseTensor
+from repro.planner import tuner
+
+SHAPE, NNZ, RANK = (80, 60, 20), 15_000, 6   # netflix-ci study shape
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(5)
+    st = SparseTensor.random(key, SHAPE, NNZ)
+    ks = jax.random.split(key, len(SHAPE))
+    factors = [jax.random.normal(k, (d, RANK)) for k, d in zip(ks, SHAPE)]
+    omega = st.with_values(jnp.ones_like(st.values))
+    x = factors[0]
+    iters = 3 if quick else 5
+    for family, lattice in tuner.LATTICES.items():
+        # quick mode still includes the default (index 0) so the
+        # default-vs-tuned pair stays comparable
+        cands = lattice[:2] if quick else lattice
+        default_us, best_us, best_tile = None, float("inf"), None
+        for tile in cands:
+            fn = tuner._family_runner(family, tile, st, omega, factors, x)
+            us = time_fn(fn, warmup=1, iters=iters)
+            if tile == lattice[0]:
+                default_us = us
+            if us < best_us:
+                best_us, best_tile = us, tile
+        emit(f"sec5_kernel_tiles_{family}_default", default_us,
+             f"tile={lattice[0].short()}")
+        emit(f"sec5_kernel_tiles_{family}_tuned", best_us,
+             f"tile={best_tile.short()}")

@@ -20,8 +20,9 @@ import traceback
 
 from benchmarks import (bench_ccd_variants, bench_completion,
                         bench_distributed, bench_gauss_newton, bench_gcp,
-                        bench_ingest, bench_mttkrp, bench_planner,
-                        bench_redistribution, bench_ttm, bench_tttp)
+                        bench_ingest, bench_kernels, bench_mttkrp,
+                        bench_planner, bench_redistribution, bench_ttm,
+                        bench_tttp)
 from benchmarks.common import drain_records
 
 # (csv prefix, module, json group)
@@ -35,6 +36,7 @@ MODULES = [
     ("gcp_generalized_losses", bench_gcp, "gcp"),
     ("planner_dispatch", bench_planner, "planner"),
     ("sec6_streaming_ingest", bench_ingest, "ingest"),
+    ("sec5_kernel_tiles", bench_kernels, "kernels"),
     ("ggn_gauss_newton", bench_gauss_newton, "completion"),
     ("sec4_distributed_completion", bench_distributed, "distributed"),
 ]

@@ -1,6 +1,8 @@
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, tile
+from repro.kernels.tile import KernelTile, current_tile, reset_tiles, set_tile
 from repro.kernels.tttp import tttp_pallas
 from repro.kernels.mttkrp import mttkrp_pallas
 from repro.kernels.cg_matvec import cg_matvec_pallas
 
-__all__ = ["ops", "ref", "tttp_pallas", "mttkrp_pallas", "cg_matvec_pallas"]
+__all__ = ["ops", "ref", "tile", "KernelTile", "current_tile", "set_tile",
+           "reset_tiles", "tttp_pallas", "mttkrp_pallas", "cg_matvec_pallas"]

@@ -2,13 +2,25 @@
 reference paths, with shape padding to block multiples.
 
 Dispatch policy: Pallas (interpret on CPU, compiled on TPU) when
-``use_pallas`` or the global default says so; pure jnp otherwise. All
-wrappers are shape-polymorphic over padding: inputs are padded to block
-multiples and outputs sliced back.
+``use_pallas`` or the per-call default says so; pure jnp otherwise. The
+device probe is resolved lazily PER CALL (never at import): late device
+initialization (``--force-host-devices``) and tests that flip
+``REPRO_USE_PALLAS`` both see the current state, not an import-time
+snapshot.
+
+All wrappers are shape-polymorphic over padding: inputs are padded to block
+multiples and outputs sliced back. Block sizes come from a
+:class:`~repro.kernels.tile.KernelTile` — explicit ``tile=`` wins, the
+legacy ``block_m``/``block_r`` kwargs override individual fields, and with
+neither the per-family process-wide table (``tile.current_tile``, where the
+planner's autotuner installs measured winners) supplies the default. The
+Pallas kernels accumulate in ``tile.accum_dtype`` (fp32 for bf16 inputs)
+and the wrappers cast back to the jnp reference path's result dtype, so
+both routes return identical dtypes.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 import os
 from typing import Optional, Sequence
 
@@ -19,14 +31,34 @@ from repro import obs
 from repro.core.sparse_tensor import SparseTensor
 from repro.core.utils import pad_axis, round_up
 from repro.kernels import ref as kref
+from repro.kernels import tile as ktile
 from repro.kernels.cg_matvec import cg_matvec_pallas
 from repro.kernels.mttkrp import mttkrp_pallas
 from repro.kernels.tttp import tttp_pallas
-from repro.sparse.ccsr import RowBlockBuckets
 
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
-_DEFAULT_USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1" or _ON_TPU
-_INTERPRET = not _ON_TPU
+
+def _on_tpu() -> bool:
+    return any(d.platform == "tpu" for d in jax.devices())
+
+
+def _default_use_pallas() -> bool:
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1" or _on_tpu()
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _resolve_tile(family: str, tile: Optional[ktile.KernelTile],
+                  block_m: Optional[int] = None,
+                  block_r: Optional[int] = None) -> ktile.KernelTile:
+    tile = tile if tile is not None else ktile.current_tile(family)
+    overrides = {}
+    if block_m is not None:
+        overrides["block_m"] = block_m
+    if block_r is not None:
+        overrides["block_r"] = block_r
+    return dataclasses.replace(tile, **overrides) if overrides else tile
 
 
 def _pad_factors(factors, block_r):
@@ -37,66 +69,80 @@ def _pad_factors(factors, block_r):
     return [None if f is None else pad_axis(f, rp, axis=1) for f in factors], r
 
 
+def _out_dtype(values_dtype, factors) -> jnp.dtype:
+    """The jnp reference path's result dtype (promotion over the Hadamard
+    chain) — the Pallas accumulator casts back to it."""
+    return jnp.result_type(values_dtype,
+                           *[f.dtype for f in factors if f is not None])
+
+
 def tttp_values(st: SparseTensor, factors: Sequence[Optional[jax.Array]],
                 use_pallas: Optional[bool] = None,
-                block_m: int = 1024, block_r: int = 128) -> jax.Array:
+                block_m: Optional[int] = None,
+                block_r: Optional[int] = None,
+                tile: Optional[ktile.KernelTile] = None) -> jax.Array:
     """TTTP output values for a padded-COO SparseTensor. Vector factors are
     promoted to single-column matrices (paper's vector-list form)."""
-    use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
     factors = [None if f is None else (f[:, None] if f.ndim == 1 else f)
                for f in factors]
+    t = _resolve_tile("tttp", tile, block_m=block_m, block_r=block_r)
     with obs.span("kernel/tttp", cap=st.cap, nnz=st.nnz,
-                  pallas=use_pallas) as sp:
+                  pallas=use_pallas, tile=t.short()) as sp:
         vals = st.values * st.mask
         if not use_pallas:
             return sp.fence(kref.tttp_ref(vals, st.indices, factors))
-        block_m = min(block_m, round_up(st.cap, 8))
-        mp = round_up(st.cap, block_m)
-        fs, r = _pad_factors(factors, block_r)
+        bm = min(t.block_m, round_up(st.cap, 8))
+        mp = round_up(st.cap, bm * t.buckets_per_step)
+        fs, r = _pad_factors(factors, t.block_r)
         out = tttp_pallas(pad_axis(vals, mp), pad_axis(st.indices, mp), fs,
-                          block_m=block_m,
-                          block_r=min(block_r, round_up(r, 128)),
-                          interpret=_INTERPRET)
-        return sp.fence(out[:st.cap])
+                          block_m=bm,
+                          block_r=min(t.block_r, round_up(r, 128)),
+                          tile=t, interpret=_interpret())
+        return sp.fence(out[:st.cap].astype(_out_dtype(vals.dtype, factors)))
 
 
 def tttp(st: SparseTensor, factors, **kw) -> SparseTensor:
     return st.with_values(tttp_values(st, factors, **kw))
 
 
-def mttkrp_bucketed(buckets: RowBlockBuckets,
-                    factors: Sequence[Optional[jax.Array]],
+def mttkrp_bucketed(buckets, factors: Sequence[Optional[jax.Array]],
                     num_rows: Optional[int] = None,
                     use_pallas: Optional[bool] = None,
-                    block_r: int = 128) -> jax.Array:
+                    block_r: Optional[int] = None,
+                    tile: Optional[ktile.KernelTile] = None) -> jax.Array:
     """All-at-once MTTKRP over ingest-time buckets; returns (num_rows, R)."""
-    use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
     num_rows = num_rows or buckets.shape[buckets.mode]
+    t = _resolve_tile("mttkrp", tile, block_r=block_r)
     with obs.span("kernel/mttkrp_bucketed", mode=buckets.mode,
-                  rows=num_rows, pallas=use_pallas) as sp:
+                  rows=num_rows, pallas=use_pallas, tile=t.short()) as sp:
         if use_pallas:
-            fs, r = _pad_factors(factors, block_r)
-            out = mttkrp_pallas(buckets, fs, block_r=block_r,
-                                interpret=_INTERPRET)
-            return sp.fence(out[:num_rows, :r])
+            fs, r = _pad_factors(factors, t.block_r)
+            out = mttkrp_pallas(buckets, fs, tile=t, interpret=_interpret())
+            dt = _out_dtype(buckets.values.dtype, factors)
+            return sp.fence(out[:num_rows, :r].astype(dt))
         out = kref.mttkrp_bucketed_ref(buckets.values, buckets.indices,
                                        buckets.local_row, factors,
                                        buckets.mode, buckets.block_rows)
         return sp.fence(out[:num_rows])
 
 
-def cg_matvec_bucketed(buckets: RowBlockBuckets,
-                       factors: Sequence[Optional[jax.Array]],
+def cg_matvec_bucketed(buckets, factors: Sequence[Optional[jax.Array]],
                        x: jax.Array, num_rows: Optional[int] = None,
-                       use_pallas: Optional[bool] = None) -> jax.Array:
+                       use_pallas: Optional[bool] = None,
+                       tile: Optional[ktile.KernelTile] = None) -> jax.Array:
     """Fused implicit-CG Gram matvec; buckets hold the Ω indicator values."""
-    use_pallas = _DEFAULT_USE_PALLAS if use_pallas is None else use_pallas
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
     num_rows = num_rows or buckets.shape[buckets.mode]
+    t = _resolve_tile("cg_matvec", tile)
     with obs.span("kernel/cg_matvec_bucketed", mode=buckets.mode,
-                  rows=num_rows, pallas=use_pallas) as sp:
+                  rows=num_rows, pallas=use_pallas, tile=t.short()) as sp:
         if use_pallas:
-            out = cg_matvec_pallas(buckets, factors, x, interpret=_INTERPRET)
-            return sp.fence(out[:num_rows])
+            out = cg_matvec_pallas(buckets, factors, x, tile=t,
+                                   interpret=_interpret())
+            dt = _out_dtype(x.dtype, factors)
+            return sp.fence(out[:num_rows].astype(dt))
         out = kref.cg_matvec_bucketed_ref(buckets.values, buckets.indices,
                                           buckets.local_row, factors, x,
                                           buckets.mode, buckets.block_rows)

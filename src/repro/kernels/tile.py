@@ -1,0 +1,170 @@
+"""Kernel tile configurations for the parameterized Pallas tier (DESIGN.md §13).
+
+A :class:`KernelTile` carries the static blocking knobs shared by every
+kernel in this package: the CCSR bucket granularity the tuner evaluates, the
+capacity (nonzero) tile each ``fori_loop`` step consumes, the rank tile, how
+many buckets one grid step processes, the accumulator dtype, and the
+in-bucket scatter schedule. Tiles are frozen/hashable (safe as jit static
+args and dict keys) and JSON-round-trippable (the on-disk plan cache,
+``repro.planner.tuner``).
+
+Scatter schedules
+-----------------
+``onehot``     — the in-bucket scatter as a ``(block_rows × C) @ (C × R)``
+                 matmul against the one-hot local-row indicator: block_rows×
+                 more MACs than a scalar scatter, but they run at MXU rate.
+``segmented``  — cumulative-sum segmented reduction on the VPU: one cumsum
+                 over the capacity axis plus a per-row boundary gather and
+                 adjacent difference — Θ(C·R) work independent of block_rows.
+``auto``       — pick by the break-even point: one-hot costs
+                 ``block_rows·C·R`` MACs at MXU rate vs the segmented
+                 schedule's ``≈C·R·(log2(C)+4)`` VPU ops; with the MXU's
+                 ~16× MAC-rate advantage the one-hot matmul wins while
+                 ``block_rows ≤ 16·(log2(C)+4)`` (≈224 at C=1024).
+
+The per-family process-wide tile table below is what ``kernels.ops`` resolves
+when a caller passes no explicit tile; ``repro.planner.tuner`` installs
+measured winners into it. NOTE: jit'd callers bake the resolved tile in at
+trace time — retuning after compilation changes future traces only (tune at
+startup, before compiling; see DESIGN.md §13).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+FAMILIES = ("tttp", "mttkrp", "cg_matvec")
+
+_SCHEDULES = ("auto", "onehot", "segmented")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTile:
+    """Static blocking config for one kernel family.
+
+    ``block_rows``       — CCSR bucket granularity (scatter height) the tuner
+                           evaluates; the kernels themselves honor the
+                           ``block_rows`` of whatever buckets they are given;
+    ``block_m``          — capacity tile: nonzeros consumed per ``fori_loop``
+                           step (bounds VMEM at Θ(block_m·block_r) transients
+                           instead of whole-bucket blocks);
+    ``block_r``          — rank (lane) tile;
+    ``buckets_per_step`` — buckets one grid step processes (amortizes grid
+                           overhead for many small buckets);
+    ``accum_dtype``      — accumulator dtype (string, for hashability and
+                           JSON); inputs may be bf16 — the Hadamard chain
+                           runs in the input dtype, accumulation in this one;
+    ``schedule``         — in-bucket scatter schedule (see module docstring).
+    """
+    block_rows: int = 8
+    block_m: int = 1024
+    block_r: int = 128
+    buckets_per_step: int = 1
+    accum_dtype: str = "float32"
+    schedule: str = "auto"
+
+    def __post_init__(self):
+        if self.schedule not in _SCHEDULES:
+            raise ValueError(f"schedule {self.schedule!r} not in {_SCHEDULES}")
+        for field in ("block_rows", "block_m", "block_r", "buckets_per_step"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be positive")
+
+    @property
+    def acc(self):
+        return jnp.dtype(self.accum_dtype)
+
+    def resolved_schedule(self, block_rows: int, block_m: int) -> str:
+        """Concrete schedule for a kernel instance ('auto' resolved by the
+        break-even point against the actual bucket/tile geometry)."""
+        if self.schedule != "auto":
+            return self.schedule
+        return ("segmented" if block_rows > onehot_break_even(block_m)
+                else "onehot")
+
+    def short(self) -> str:
+        """Compact label for spans/benchmarks: br8.m1024.r128.g1.f32.auto"""
+        acc = {"float32": "f32", "bfloat16": "bf16",
+               "float64": "f64"}.get(self.accum_dtype, self.accum_dtype)
+        return (f"br{self.block_rows}.m{self.block_m}.r{self.block_r}"
+                f".g{self.buckets_per_step}.{acc}.{self.schedule}")
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "KernelTile":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+def onehot_break_even(block_m: int) -> int:
+    """block_rows above which the segmented schedule beats the one-hot
+    matmul: block_rows·C MACs at MXU rate vs ≈C·(log2(C)+4) VPU ops per
+    output column — the MXU's ~16× rate advantage sets the crossover."""
+    return int(16 * (math.log2(max(block_m, 2)) + 4))
+
+
+def scatter_rows(prod, key, block_rows: int, schedule: str, acc_dtype):
+    """Scatter-add ``prod`` (C, R) rows into (block_rows, R) output rows by
+    ``key`` (C,) — the in-bucket scatter primitive both bucketed kernels
+    share, usable inside Pallas kernel bodies (pure jnp).
+
+    ``key`` must be monotone nondecreasing with padding slots mapped PAST
+    the valid range (``key == block_rows``): CCSR buckets store sorted
+    nonzeros but their padding tail carries ``local_row == 0``, so callers
+    build ``key = where(valid, local_row, block_rows)``. Monotonicity is
+    what lets the segmented schedule express "rows with key ≤ i" as a
+    prefix of the cumulative sum.
+    """
+    if schedule == "onehot":
+        onehot = (key[None, :]
+                  == jax.lax.iota(jnp.int32, block_rows)[:, None])
+        return jnp.dot(onehot.astype(prod.dtype), prod,
+                       preferred_element_type=acc_dtype)
+    if schedule != "segmented":
+        raise ValueError(f"unresolved scatter schedule {schedule!r}")
+    # segmented reduction: prefix-sum along the capacity axis, then for each
+    # output row gather the boundary prefix E[i] = csum[last j with key ≤ i]
+    # and take adjacent differences — rows with no entries contribute 0
+    csum = jnp.cumsum(prod.astype(acc_dtype), axis=0)           # (C, R)
+    rows = jax.lax.iota(jnp.int32, block_rows)
+    ends = jnp.sum((key[None, :] <= rows[:, None]).astype(jnp.int32),
+                   axis=1)                                       # (block_rows,)
+    gathered = jnp.take(csum, jnp.maximum(ends - 1, 0), axis=0)
+    e = jnp.where((ends > 0)[:, None], gathered,
+                  jnp.zeros_like(gathered))
+    prev = jnp.concatenate([jnp.zeros_like(e[:1]), e[:-1]], axis=0)
+    return e - prev
+
+
+# ---------------------------------------------------------------------------
+# process-wide per-family tile table (the tuner's output seam)
+# ---------------------------------------------------------------------------
+
+DEFAULT_TILE = KernelTile()
+
+_TILE_TABLE: Dict[str, KernelTile] = {f: DEFAULT_TILE for f in FAMILIES}
+
+
+def current_tile(family: str) -> KernelTile:
+    """The tile ``kernels.ops`` resolves for ``family`` when the caller
+    passes none — the default until ``repro.planner.tuner`` installs a
+    measured winner."""
+    return _TILE_TABLE[family]
+
+
+def set_tile(family: str, tile: KernelTile) -> None:
+    if family not in _TILE_TABLE:
+        raise KeyError(f"unknown kernel family {family!r}; "
+                       f"families: {FAMILIES}")
+    _TILE_TABLE[family] = tile
+
+
+def reset_tiles() -> None:
+    for f in FAMILIES:
+        _TILE_TABLE[f] = DEFAULT_TILE

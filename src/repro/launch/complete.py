@@ -75,6 +75,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--block-rows", type=int, default=None,
                     help="CCSR bucket granularity for the ingest-time "
                          "bucket views (default: PlannerConfig.block_rows)")
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="on-disk kernel-tile plan cache (JSON). Autotunes "
+                         "the Pallas kernel tiles at startup — before the "
+                         "jit'd sweeps trace, which bake the tiles in — and "
+                         "persists the measured winners; a second run of "
+                         "the same workload re-installs them with zero "
+                         "timings. Default: $REPRO_PLAN_CACHE; unset "
+                         "disables tuning")
     ap.add_argument("--dump-factors", default=None, metavar="PATH",
                     help="write the final factor matrices to PATH (.npz, "
                          "keys factor_0..factor_{N-1})")
@@ -184,6 +192,21 @@ def main():
     print(f"dataset={args.dataset} shape={shape} nnz={st.nnz} rank={r} "
           f"algorithm={args.algorithm} loss={args.loss}")
 
+    # ---- kernel-tile autotuning (must precede the jit'd sweeps: the tile
+    # table is read at trace time, so tuning later would not retile them) --
+    plan_cache = args.plan_cache or os.environ.get("REPRO_PLAN_CACHE")
+    if plan_cache:
+        if mesh is not None:
+            print("note: --plan-cache tuning skipped under --mesh (tiles "
+                  "are tuned on single-device eager kernels)")
+        else:
+            from repro.planner import tuner
+            summary = tuner.ensure_tuned(st, factors, omega=omega,
+                                         cache_path=plan_cache)
+            print(f"plan-cache: hits={summary['hits']} "
+                  f"measured={summary['measured']} "
+                  f"winners={summary['winners']}")
+
     loss = LOSS.LOSSES[args.loss]
     sample = max(1024, int(args.sample_rate * st.nnz))
 
@@ -275,8 +298,12 @@ def main():
 
     loop = RestartableLoop(args.ckpt_dir, loop_step, ckpt_every=5)
     final = loop.run(state0, args.sweeps)
-    print(f"final rmse={hist[-1][2]:.6f} "
-          f"(mean sweep {sum(h[1] for h in hist)/len(hist)*1e3:.1f} ms)")
+    if hist:
+        print(f"final rmse={hist[-1][2]:.6f} "
+              f"(mean sweep {sum(h[1] for h in hist)/len(hist)*1e3:.1f} ms)")
+    else:  # checkpoint resume found every sweep already done
+        print(f"final rmse={rmse(st, get_factors(final)):.6f} "
+              f"(all {args.sweeps} sweeps restored from {args.ckpt_dir})")
     if args.dump_factors:
         fs = get_factors(final)
         np.savez(args.dump_factors,

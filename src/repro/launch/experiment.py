@@ -169,12 +169,16 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
                    algorithms: Optional[Tuple[str, ...]] = None,
                    losses: Optional[Tuple[str, ...]] = None,
                    spool_dir: Optional[str] = None,
-                   trace: bool = False) -> dict:
+                   trace: bool = False,
+                   plan_cache: Optional[str] = None) -> dict:
     """Run every (algorithm, loss) pair of ``spec`` and write
     ``<out_dir>/experiment_<name>.json``; returns the report dict.
     ``trace=True`` enables obs tracing with a JSONL event stream at
     ``<out_dir>/trace_<name>.jsonl`` (per-sweep span trees additionally
-    ride the metric history in the checkpoint manifest)."""
+    ride the metric history in the checkpoint manifest). ``plan_cache``
+    autotunes the kernel tiles right after ingest (before any solver
+    jit-traces) and persists the winners to that JSON file — a rerun of
+    the same spec restores them with zero timings."""
     import jax
 
     if trace:
@@ -215,6 +219,22 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
           f"dups_dropped={stats.duplicates_dropped} "
           f"ingest={ingest_seconds:.1f}s")
 
+    plan_cache = plan_cache or os.environ.get("REPRO_PLAN_CACHE")
+    tune_summary = None
+    if plan_cache:
+        # must precede make_solver: the jit'd sweeps bake the tile table in
+        # at trace time (DESIGN.md §13)
+        from repro.planner import tuner
+        tune_key = jax.random.fold_in(jax.random.PRNGKey(spec.seed), 97)
+        tks = jax.random.split(tune_key, len(spec.shape))
+        tune_factors = [jax.random.normal(k, (d, spec.rank)) / spec.rank ** 0.5
+                        for k, d in zip(tks, spec.shape)]
+        tune_summary = tuner.ensure_tuned(st, tune_factors, omega=omega,
+                                          cache_path=plan_cache)
+        print(f"plan-cache: hits={tune_summary['hits']} "
+              f"measured={tune_summary['measured']} "
+              f"winners={tune_summary['winners']}")
+
     report = {
         "spec": {**dataclasses.asdict(spec), "shape": list(spec.shape)},
         "ingest": {
@@ -233,6 +253,11 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
         },
         "runs": [],
     }
+    if tune_summary is not None:
+        report["plan_cache"] = {"path": plan_cache,
+                                "hits": tune_summary["hits"],
+                                "measured": tune_summary["measured"],
+                                "winners": tune_summary["winners"]}
 
     for loss_name in losses:
         loss = LOSS.LOSSES[loss_name]
@@ -345,6 +370,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--trace", action="store_true",
                     help="enable obs tracing; writes trace_<spec>.jsonl "
                          "next to the experiment JSON")
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="on-disk kernel-tile plan cache (JSON): autotune "
+                         "the Pallas tiles after ingest and persist the "
+                         "winners (default: $REPRO_PLAN_CACHE; unset "
+                         "disables tuning)")
     return ap
 
 
@@ -368,7 +398,8 @@ def main():
         algorithms=tuple(args.algorithms.split(",")) if args.algorithms
         else None,
         losses=tuple(args.losses.split(",")) if args.losses else None,
-        spool_dir=args.spool_dir, trace=args.trace)
+        spool_dir=args.spool_dir, trace=args.trace,
+        plan_cache=args.plan_cache)
 
 
 if __name__ == "__main__":

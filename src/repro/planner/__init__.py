@@ -6,6 +6,7 @@ Layering::
     ir.py        einsum IR — parse + classify into contraction families
     cost.py      paper §5.3 flop/memory formulas per candidate path
     plan.py      path enumeration, ranking, plan cache, autotuning
+    tuner.py     measured kernel-tile autotuning + on-disk plan cache
     dispatch.py  lowering onto repro.sparse.ops / repro.kernels
 
 ``repro.core.api.einsum`` and ``api.TTTP`` are thin shims over
@@ -29,14 +30,16 @@ from repro.planner.dispatch import execute
 from repro.planner.ir import ContractionIR, DistInfo, build_ir
 from repro.planner.plan import (Plan, clear_plan_cache, plan_cache_size,
                                 plan_contraction)
+from repro.planner.tuner import ensure_tuned
 
 __all__ = [
     "ContractionIR", "DistInfo", "PathCost", "Plan", "PlannerConfig",
     "DEFAULT_CONFIG", "default_config", "set_default_config",
     "build_ir", "candidate_paths", "estimate", "rank_paths",
     "plan_contraction", "clear_plan_cache", "plan_cache_size",
-    "execute", "planned_einsum", "planned_mttkrp", "planned_tttp",
-    "planned_cg_matvec", "planned_reduce", "mttkrp_fn", "tttp_fn",
+    "execute", "ensure_tuned", "planned_einsum", "planned_mttkrp",
+    "planned_tttp", "planned_cg_matvec", "planned_reduce",
+    "mttkrp_fn", "tttp_fn",
 ]
 
 # mode letters for synthesized expressions; 'z' is reserved for the kept

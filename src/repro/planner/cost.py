@@ -27,11 +27,72 @@ from typing import List, Tuple
 from repro.planner import ir as pir
 
 # Machine-balance constants (per second): ranking only depends on the ratio.
+# These are the UNCALIBRATED defaults — the planner's autotuner
+# (``repro.planner.tuner``) fits the live rates below against fenced kernel
+# measurements (§5.3 calibration), so untuned shapes rank on measured
+# machine balance rather than the TPU-napkin defaults.
 FLOP_RATE = 1.0e11   # fused multiply-adds / s
 MEM_RATE = 1.0e10    # words / s
 COMM_RATE = 1.0e9    # words / s over mesh links (≈10× slower than HBM)
 # words of traffic per element per sort-key column (multi-pass stable argsort)
 SORT_WORDS_PER_KEY = 8.0
+
+_DEFAULT_RATES = {"flop": FLOP_RATE, "mem": MEM_RATE, "comm": COMM_RATE}
+_RATES = dict(_DEFAULT_RATES)
+
+
+def rates() -> dict:
+    """The live machine-balance rates (a copy)."""
+    return dict(_RATES)
+
+
+def set_rates(flop: float = None, mem: float = None,
+              comm: float = None) -> None:
+    """Install calibrated rates; None leaves a rate unchanged. Rates must be
+    positive — the time proxy divides by them."""
+    for key, val in (("flop", flop), ("mem", mem), ("comm", comm)):
+        if val is not None:
+            if not val > 0:
+                raise ValueError(f"{key} rate must be positive, got {val}")
+            _RATES[key] = float(val)
+
+
+def reset_rates() -> None:
+    _RATES.update(_DEFAULT_RATES)
+
+
+def calibrate(samples) -> dict:
+    """Fit the flop/mem rates to measured (flops, mem, seconds) samples.
+
+    Least-squares on seconds ≈ flops/flop_rate + mem/mem_rate (the §5.3
+    roofline proxy with both terms exposed): solves for the inverse rates
+    with a positivity clamp. With fewer than two samples — or when the fit
+    degenerates (collinear samples can drive an inverse rate ≤ 0) — falls
+    back to scaling both default rates by the median measured/predicted
+    ratio, which preserves the default flop:mem balance while matching the
+    observed magnitude. Returns the installed rates."""
+    samples = [(float(f), float(w), float(s)) for f, w, s in samples
+               if s > 0 and (f > 0 or w > 0)]
+    if not samples:
+        return rates()
+    inv = None
+    if len(samples) >= 2:
+        import numpy as np
+        a = np.array([[f, w] for f, w, _ in samples])
+        t = np.array([s for _, _, s in samples])
+        sol, *_ = np.linalg.lstsq(a, t, rcond=None)
+        if sol[0] > 0 and sol[1] > 0:
+            inv = sol
+    if inv is not None:
+        set_rates(flop=1.0 / inv[0], mem=1.0 / inv[1])
+    else:
+        ratios = sorted(
+            s / (f / _DEFAULT_RATES["flop"] + w / _DEFAULT_RATES["mem"])
+            for f, w, s in samples)
+        scale = ratios[len(ratios) // 2]
+        set_rates(flop=_DEFAULT_RATES["flop"] / scale,
+                  mem=_DEFAULT_RATES["mem"] / scale)
+    return rates()
 
 # Preference order used only to break exact score ties deterministically.
 _TIE_ORDER = ("all_at_once", "fused", "tttp_mttkrp", "segment", "dense_output",
@@ -50,9 +111,10 @@ class PathCost:
     @property
     def seconds(self) -> float:
         """Roofline-style time proxy: compute + traffic + communication
-        (not overlapped)."""
-        return (self.flops / FLOP_RATE + self.mem / MEM_RATE
-                + self.comm / COMM_RATE)
+        (not overlapped). Reads the LIVE rates, so tuner calibration
+        re-ranks candidate paths process-wide."""
+        return (self.flops / _RATES["flop"] + self.mem / _RATES["mem"]
+                + self.comm / _RATES["comm"])
 
 
 def _sort_traffic(m: int, key_cols: int) -> float:

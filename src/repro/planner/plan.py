@@ -20,7 +20,6 @@ pinning the measured winner; the timings are stored on the plan.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -103,16 +102,13 @@ def _any_tracer(operands: Sequence) -> bool:
 
 def _time_path(ir: pir.ContractionIR, path: str, operands: Sequence,
                ctx: AxisCtx, config: PlannerConfig, iters: int = 3) -> float:
+    from repro.planner import tuner  # deferred: tuner pulls in kernels.ops
+
     def run():
-        return jax.block_until_ready(
-            pdispatch.execute(ir, path, operands, ctx=ctx, config=config))
-    run()                                    # warmup / compile
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        run()
-        best = min(best, time.perf_counter() - t0)
-    return best
+        return pdispatch.execute(ir, path, operands, ctx=ctx, config=config)
+    return tuner.fenced_time(run, iters=iters,
+                             span_name=f"planner/autotune/{path}",
+                             kind=str(ir.kind), expr=ir.expr)
 
 
 def _dist_info(ctx: AxisCtx, rowsharded: bool) -> Optional[pir.DistInfo]:

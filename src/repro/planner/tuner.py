@@ -1,0 +1,298 @@
+"""Measured kernel-tile autotuning with a persistent on-disk plan cache
+(DESIGN.md §13).
+
+The planner's one-shot ``autotune=True`` times candidate *paths*; this
+module tunes the *kernel tiles* underneath them: for each kernel family it
+sweeps a small lattice of :class:`~repro.kernels.tile.KernelTile`
+candidates, times each with fenced ``obs.span`` measurements (so the
+timings land in the same registry as planner dispatch spans and surface in
+PERF.md), records every candidate into the predicted-vs-measured
+``PlanRecord`` table, installs the winner into the process-wide tile table
+(``repro.kernels.tile.set_tile``), and calibrates the §5.3 cost-model rate
+constants (``repro.planner.cost.set_rates``) from the same measurements.
+
+Winners persist to an on-disk JSON plan cache keyed by
+
+    (device kind, tile-lattice version, family, plan signature)
+
+so a second run of the same workload performs ZERO timings: the cache entry
+re-installs the tile and the stored calibration rates. Any key component
+changing — a different accelerator, a new lattice version after the
+candidate set evolves, a different tensor signature — misses by
+construction and re-measures. The cache path comes from the
+``REPRO_PLAN_CACHE`` env var or the ``--plan-cache`` flag of
+``launch/complete.py`` / ``launch/experiment.py``.
+
+Caveat (also in DESIGN.md §13): jit'd callers bake the resolved tile in at
+trace time, so tune at startup BEFORE compiling sweeps — retuning later
+affects only future traces.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro import obs
+from repro.kernels.tile import (FAMILIES, KernelTile, current_tile,
+                                set_tile)
+from repro.planner import cost as pcost
+
+# Bump when the candidate set below changes shape: stale cached winners from
+# an older lattice must re-measure, not silently win against new candidates.
+LATTICE_VERSION = 1
+
+# Per-family candidate tiles. The DEFAULT tile is always first, so the
+# measured winner is never slower than the default configuration (the
+# BENCH_kernels.json acceptance bound). Small on purpose: interpret-mode CI
+# times every candidate.
+LATTICES: Dict[str, Tuple[KernelTile, ...]] = {
+    "tttp": (
+        KernelTile(),
+        KernelTile(block_m=512),
+        KernelTile(block_m=256, block_r=64, buckets_per_step=2),
+        KernelTile(block_m=2048, block_r=64),
+    ),
+    "mttkrp": (
+        KernelTile(),
+        KernelTile(block_m=256, buckets_per_step=2),
+        KernelTile(block_m=512, block_r=64),
+        KernelTile(schedule="segmented"),
+        KernelTile(block_m=256, block_r=64, buckets_per_step=4),
+    ),
+    "cg_matvec": (
+        KernelTile(),
+        KernelTile(block_m=256, buckets_per_step=2),
+        KernelTile(schedule="segmented"),
+        KernelTile(block_m=512, buckets_per_step=4),
+    ),
+}
+
+# the planner path each family's tuned kernel realizes (PlanRecord rows)
+_FAMILY_PATH = {"tttp": "all_at_once", "mttkrp": "bucketed",
+                "cg_matvec": "fused"}
+
+_MODE_LETTERS = "abcdefghij"
+
+
+def fenced_time(fn, iters: int = 3, span_name: str = "tuner/measure",
+                **attrs) -> float:
+    """Best-of-``iters`` fenced wall time of ``fn()`` after one warmup call
+    (compile). Every timed run executes inside an ``obs.span`` whose fence
+    blocks on the result, so measurements share the registry (and PERF.md)
+    with planner dispatch spans."""
+    jax.block_until_ready(fn())              # warmup / compile
+    best = float("inf")
+    for _ in range(iters):
+        with obs.span(span_name, **attrs) as sp:
+            t0 = time.perf_counter()
+            sp.fence(fn())
+            best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _family_ir(family: str, st, factors):
+    """The ContractionIR whose §5.3 estimate prices this family's tuned
+    kernel (mode-0 form — the shape every solver sweep hits first)."""
+    from repro.planner import ir as pir
+    s = _MODE_LETTERS[:st.ndim]
+    if family == "tttp":
+        expr = ",".join([s] + [s[d] + "z" for d in range(st.ndim)]) + "->" + s
+        operands = (st, *factors)
+    elif family == "mttkrp":
+        expr = (",".join([s] + [s[d] + "z" for d in range(1, st.ndim)])
+                + "->" + s[0] + "z")
+        operands = (st, *factors[1:])
+    elif family == "cg_matvec":
+        others = range(1, st.ndim)
+        expr = (",".join([s] + [s[d] + "z" for d in others] + [s[0] + "y"]
+                         + [s[d] + "y" for d in others])
+                + "->" + s[0] + "z")
+        operands = (st, *factors[1:], factors[0], *factors[1:])
+    else:
+        raise KeyError(f"unknown kernel family {family!r}")
+    return pir.build_ir(expr, operands)
+
+
+def _family_runner(family: str, tile: KernelTile, st, omega, factors, x):
+    """An argless callable running this family's Pallas kernel under
+    ``tile`` — the thing the tuner times."""
+    from repro.kernels import ops as kops
+    if family == "tttp":
+        return lambda: kops.tttp_values(st, factors, use_pallas=True,
+                                        tile=tile)
+    fs = [None] + list(factors[1:])
+    if family == "mttkrp":
+        buckets = st.row_buckets(0, tile.block_rows)
+        return lambda: kops.mttkrp_bucketed(buckets, fs,
+                                            num_rows=st.shape[0],
+                                            use_pallas=True, tile=tile)
+    if family == "cg_matvec":
+        buckets = omega.row_buckets(0, tile.block_rows)
+        return lambda: kops.cg_matvec_bucketed(buckets, fs, x,
+                                               num_rows=st.shape[0],
+                                               use_pallas=True, tile=tile)
+    raise KeyError(f"unknown kernel family {family!r}")
+
+
+def tune_family(family: str, st, factors, omega=None, x=None,
+                lattice: Optional[Sequence[KernelTile]] = None,
+                iters: int = 3) -> Dict:
+    """Time every lattice candidate for one family, install the winner, and
+    return ``{"tile", "seconds", "timings", "predicted"}``. Each timed
+    candidate bumps the ``tuner/measurements`` counter and lands a
+    PlanRecord row keyed ``autotune/<family>|<path>|tile:<short>``."""
+    lattice = tuple(lattice if lattice is not None else LATTICES[family])
+    ir = _family_ir(family, st, factors)
+    path = _FAMILY_PATH[family]
+    cost = pcost.estimate(ir, path)
+    predicted = {"flops": cost.flops, "mem": cost.mem, "comm": cost.comm,
+                 "seconds": cost.seconds}
+    timings: List[Tuple[KernelTile, float]] = []
+    for tile in lattice:
+        run = _family_runner(family, tile, st, omega, factors, x)
+        seconds = fenced_time(
+            run, iters=iters, span_name=f"tuner/{family}",
+            tile=tile.short(), nnz=ir.nnz, rank=ir.rank_size)
+        obs.counter_add("tuner/measurements")
+        obs.get_registry().record_plan(
+            f"autotune/{family}|{path}|tile:{tile.short()}",
+            str(ir.kind), path, ir.expr, predicted, seconds)
+        timings.append((tile, seconds))
+    winner, best = min(timings, key=lambda t: t[1])
+    set_tile(family, winner)
+    return {"tile": winner, "seconds": best,
+            "timings": [(t.short(), s) for t, s in timings],
+            "predicted": predicted}
+
+
+# ---------------------------------------------------------------------------
+# persistent on-disk plan cache
+# ---------------------------------------------------------------------------
+
+def device_kind() -> str:
+    return jax.devices()[0].device_kind
+
+
+def plan_signature(st, factors) -> str:
+    """Static signature of the tuned workload: tile winners transfer across
+    runs of the same (shape, nnz, rank, dtype) tensor only."""
+    r = next(int(f.shape[1]) for f in factors if f is not None)
+    return (f"shape={'x'.join(str(s) for s in st.shape)}|nnz={st.nnz}"
+            f"|cap={st.cap}|r={r}|dt={st.values.dtype}")
+
+
+def cache_key(family: str, st, factors,
+              lattice_version: Optional[int] = None) -> str:
+    v = LATTICE_VERSION if lattice_version is None else lattice_version
+    return f"{device_kind()}|v{v}|{family}|{plan_signature(st, factors)}"
+
+
+class PlanCacheFile:
+    """The on-disk winner store: a flat JSON object of full cache keys →
+    ``{tile, seconds, timings}`` plus the calibrated rates. Unknown or
+    stale keys (different device kind / lattice version / signature) simply
+    never match — invalidation by key construction, no file-level state."""
+
+    def __init__(self, path: Optional[str]):
+        self.path = path
+        self.entries: Dict[str, Dict] = {}
+        self.rates: Optional[Dict[str, float]] = None
+        if path and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    data = json.load(f)
+                self.entries = dict(data.get("entries", {}))
+                self.rates = data.get("rates")
+            except (OSError, ValueError):
+                self.entries = {}
+                self.rates = None
+
+    def get(self, key: str) -> Optional[KernelTile]:
+        entry = self.entries.get(key)
+        if entry is None:
+            return None
+        try:
+            return KernelTile.from_json(entry["tile"])
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put(self, key: str, result: Dict) -> None:
+        self.entries[key] = {"tile": result["tile"].to_json(),
+                             "seconds": result["seconds"],
+                             "timings": result["timings"]}
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump({"lattice_version": LATTICE_VERSION,
+                       "entries": self.entries, "rates": self.rates},
+                      f, indent=2, sort_keys=True)
+
+
+def ensure_tuned(st, factors, omega=None, x=None,
+                 families: Optional[Sequence[str]] = None,
+                 cache_path: Optional[str] = None,
+                 calibrate: bool = True, iters: int = 3) -> Dict:
+    """Tune (or cache-restore) the kernel tiles for ``families`` and return
+    a summary ``{"hits", "measured", "winners", "cache_path"}``.
+
+    Per family: a cache hit installs the stored tile with zero timings
+    (counter ``tuner/cache_hits``); a miss sweeps the lattice, installs the
+    winner and stores it. ``cache_path`` defaults to ``REPRO_PLAN_CACHE``;
+    None/empty disables persistence (always measures). Fresh measurements
+    calibrate the cost-model rates and persist them; a fully-cached run
+    re-installs the stored rates instead. The cg_matvec family needs
+    ``omega`` (the Ω-indicator tensor) and is skipped without it; ``x``
+    defaults to the mode-0 factor (same shape as the CG direction)."""
+    cache_path = (cache_path if cache_path is not None
+                  else os.environ.get("REPRO_PLAN_CACHE") or None)
+    if families is None:
+        families = [f for f in FAMILIES
+                    if f != "cg_matvec" or omega is not None]
+    if x is None:
+        x = factors[0]
+    cache = PlanCacheFile(cache_path)
+    summary: Dict = {"hits": 0, "measured": 0, "winners": {},
+                     "cache_path": cache_path}
+    samples = []
+    fresh = False
+    for family in families:
+        key = cache_key(family, st, factors)
+        tile = cache.get(key)
+        if tile is not None:
+            set_tile(family, tile)
+            obs.counter_add("tuner/cache_hits")
+            summary["hits"] += 1
+            summary["winners"][family] = tile.short()
+            continue
+        result = tune_family(family, st, factors, omega=omega, x=x,
+                             iters=iters)
+        cache.put(key, result)
+        fresh = True
+        summary["measured"] += len(result["timings"])
+        summary["winners"][family] = result["tile"].short()
+        p = result["predicted"]
+        samples.append((p["flops"], p["mem"], result["seconds"]))
+    if calibrate:
+        if samples:
+            cache.rates = pcost.calibrate(samples)
+            obs.counter_add("tuner/calibrations")
+        elif cache.rates:
+            # fully cached: restore the rates the original measurements fit
+            pcost.set_rates(**{k: cache.rates.get(k) for k in
+                               ("flop", "mem", "comm")})
+    if fresh and cache_path:
+        cache.save()
+    summary["rates"] = pcost.rates()
+    return summary
+
+
+def tiles_summary() -> Dict[str, str]:
+    return {f: current_tile(f).short() for f in FAMILIES}

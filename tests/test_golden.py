@@ -110,3 +110,66 @@ def test_golden_cg_matvec_all_paths(path):
     got = kops.cg_matvec_bucketed(buckets, fs, x, num_rows=st.shape[0])
     np.testing.assert_allclose(got, want, err_msg="cg_matvec_bucketed",
                                **GOLDEN_TOL)
+
+
+# ---------------------------------------------------------------------------
+# tile tier (DESIGN.md §13): every lattice candidate must match the goldens
+# ---------------------------------------------------------------------------
+
+from repro.planner import tuner  # noqa: E402  (tier tests extend this file)
+
+# §13's documented bf16 bound: bf16 inputs, fp32 accumulation. Measured
+# worst case on the golden fixtures is ~0.037 (relative, |w|+1 denominator).
+BF16_TOL = dict(rtol=6e-2, atol=6e-2)
+
+
+@pytest.mark.parametrize("path", GOLDEN_FILES, ids=_ids(GOLDEN_FILES))
+def test_golden_tile_lattice_fp32(path):
+    """Every autotuner lattice candidate reproduces the goldens to
+    GOLDEN_TOL — tile choice moves time, never numerics."""
+    z, st, factors = _load(path)
+    x = jnp.asarray(z["x"])
+    fs = [None, *factors[1:]]
+    for tile in tuner.LATTICES["tttp"]:
+        np.testing.assert_allclose(
+            kops.tttp_values(st, factors, use_pallas=True, tile=tile),
+            z["tttp_vals"], err_msg=f"tttp tile {tile.short()}",
+            **GOLDEN_TOL)
+    for tile in tuner.LATTICES["mttkrp"]:
+        buckets = bucketize(st, 0, block_rows=tile.block_rows)
+        np.testing.assert_allclose(
+            kops.mttkrp_bucketed(buckets, fs, num_rows=st.shape[0],
+                                 use_pallas=True, tile=tile),
+            z["mttkrp_m0"], err_msg=f"mttkrp tile {tile.short()}",
+            **GOLDEN_TOL)
+    for tile in tuner.LATTICES["cg_matvec"]:
+        buckets = bucketize(st, 0, block_rows=tile.block_rows)
+        np.testing.assert_allclose(
+            kops.cg_matvec_bucketed(buckets, fs, x, num_rows=st.shape[0],
+                                    use_pallas=True, tile=tile),
+            z["cg_m0"], err_msg=f"cg_matvec tile {tile.short()}",
+            **GOLDEN_TOL)
+
+
+@pytest.mark.parametrize("path", GOLDEN_FILES, ids=_ids(GOLDEN_FILES))
+def test_golden_bf16_within_documented_bound(path):
+    """bf16 inputs with fp32 accumulation stay within the §13 bound of the
+    float64 references (and return bf16, like the jnp reference path)."""
+    z, st, factors = _load(path)
+    st16 = st.astype(jnp.bfloat16)
+    f16 = [f.astype(jnp.bfloat16) for f in factors]
+    got = kops.tttp_values(st16, f16, use_pallas=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32), z["tttp_vals"],
+                               err_msg="bf16 tttp", **BF16_TOL)
+    buckets = bucketize(st16, 0, block_rows=8)
+    fs16 = [None, *f16[1:]]
+    got = kops.mttkrp_bucketed(buckets, fs16, num_rows=st.shape[0],
+                               use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32), z["mttkrp_m0"],
+                               err_msg="bf16 mttkrp", **BF16_TOL)
+    x16 = jnp.asarray(z["x"]).astype(jnp.bfloat16)
+    got = kops.cg_matvec_bucketed(buckets, fs16, x16, num_rows=st.shape[0],
+                                  use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32), z["cg_m0"],
+                               err_msg="bf16 cg_matvec", **BF16_TOL)

@@ -102,3 +102,138 @@ def test_pallas_vs_jnp_dispatch_agree():
     a = kops.tttp_values(st, factors, use_pallas=True, block_m=64, block_r=16)
     b = kops.tttp_values(st, factors, use_pallas=False)
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tile tier (DESIGN.md §13): KernelTile-parameterized schedules and blocking
+# ---------------------------------------------------------------------------
+
+from repro.kernels.tile import KernelTile, onehot_break_even, scatter_rows
+
+
+def test_scatter_schedules_agree():
+    """The segmented-reduction scatter is a drop-in for the one-hot matmul,
+    including padding slots (key == block_rows falls off the end)."""
+    key = jax.random.PRNGKey(7)
+    prod = jax.random.normal(key, (64, 16))
+    rows = jnp.sort(jax.random.randint(key, (64,), 0, 9))  # 8 = padding
+    a = scatter_rows(prod, rows, 8, "onehot", jnp.float32)
+    b = scatter_rows(prod, rows, 8, "segmented", jnp.float32)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_break_even_monotone():
+    assert onehot_break_even(2048) > onehot_break_even(256) > 0
+    assert KernelTile(schedule="auto").resolved_schedule(8, 1024) == "onehot"
+    big = onehot_break_even(1024) + 8
+    assert KernelTile(schedule="auto").resolved_schedule(big, 1024) \
+        == "segmented"
+
+
+@pytest.mark.parametrize("schedule", ["onehot", "segmented"])
+@pytest.mark.parametrize("g", [1, 3])
+def test_mttkrp_tile_schedules_match_ref(schedule, g):
+    st, factors = _mk(jax.random.PRNGKey(8), (64, 32, 16), 500, 16,
+                      jnp.float32)
+    bk = bucketize(st, 0, block_rows=8)
+    fac = [None] + factors[1:]
+    tile = KernelTile(block_m=64, schedule=schedule, buckets_per_step=g)
+    got = kops.mttkrp_bucketed(bk, fac, num_rows=64, use_pallas=True,
+                               tile=tile)
+    want = kops.mttkrp_bucketed(bk, fac, num_rows=64, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("schedule", ["onehot", "segmented"])
+@pytest.mark.parametrize("g", [1, 2])
+def test_cg_matvec_tile_schedules_match_ref(schedule, g):
+    key = jax.random.PRNGKey(9)
+    st, factors = _mk(key, (64, 32, 16), 500, 16, jnp.float32)
+    omega = st.with_values(jnp.ones_like(st.values))
+    bk = bucketize(omega, 0, block_rows=8)
+    fac = [None] + factors[1:]
+    x = jax.random.normal(key, (64, 16))
+    tile = KernelTile(block_m=64, schedule=schedule, buckets_per_step=g)
+    got = kops.cg_matvec_bucketed(bk, fac, x, num_rows=64, use_pallas=True,
+                                  tile=tile)
+    want = kops.cg_matvec_bucketed(bk, fac, x, num_rows=64, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_capacity_not_multiple_of_block_m():
+    """Bucket capacity that doesn't divide the capacity tile gets padded
+    inside the pallas wrappers (padding slots carry valid=0)."""
+    st, factors = _mk(jax.random.PRNGKey(10), (40, 24, 12), 300, 8,
+                      jnp.float32)
+    bk = bucketize(st, 0, block_rows=8)
+    fac = [None] + factors[1:]
+    for bm in (16, 24):
+        got = kops.mttkrp_bucketed(bk, fac, num_rows=40, use_pallas=True,
+                                   tile=KernelTile(block_m=bm))
+        want = kops.mttkrp_bucketed(bk, fac, num_rows=40, use_pallas=False)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"block_m={bm}")
+
+
+@pytest.mark.parametrize("r", [10, 5])
+def test_rank_not_multiple_of_block_r(r):
+    """R that doesn't divide block_r: ops pads the factors' rank axis and
+    slices the result back."""
+    st, factors = _mk(jax.random.PRNGKey(11), (32, 16, 8), 200, r,
+                      jnp.float32)
+    tile = KernelTile(block_m=64, block_r=32)
+    got = kops.tttp_values(st, factors, use_pallas=True, tile=tile)
+    want = kref.tttp_ref(st.values * st.mask, st.indices, factors)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+    bk = bucketize(st, 0, block_rows=8)
+    fac = [None] + factors[1:]
+    got = kops.mttkrp_bucketed(bk, fac, num_rows=32, use_pallas=True,
+                               tile=tile)
+    want = kops.mttkrp_bucketed(bk, fac, num_rows=32, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_single_factor_mttkrp_matrix_case():
+    """2-D tensor: the Hadamard chain degenerates to ONE other factor."""
+    st, factors = _mk(jax.random.PRNGKey(12), (128, 8), 200, 8, jnp.float32)
+    bk = bucketize(st, 0, block_rows=8)
+    fac = [None, factors[1]]
+    got = kops.mttkrp_bucketed(bk, fac, num_rows=128, use_pallas=True)
+    dense = st.todense()
+    want = jnp.einsum("ij,jr->ir", dense, factors[1])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# §13's documented bf16 bound: bf16 Hadamard chain, fp32 MXU accumulation
+BF16_TOL = dict(rtol=6e-2, atol=6e-2)
+
+
+def test_mttkrp_bf16_accumulates_fp32():
+    st, factors = _mk(jax.random.PRNGKey(13), (64, 32, 16), 500, 16,
+                      jnp.bfloat16)
+    bk = bucketize(st, 0, block_rows=8)
+    fac = [None] + factors[1:]
+    got = kops.mttkrp_bucketed(bk, fac, num_rows=64, use_pallas=True)
+    assert got.dtype == jnp.bfloat16
+    f32 = [None] + [f.astype(jnp.float32) for f in factors[1:]]
+    bk32 = bucketize(st.astype(jnp.float32), 0, block_rows=8)
+    want = kops.mttkrp_bucketed(bk32, f32, num_rows=64, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **BF16_TOL)
+
+
+def test_cg_matvec_bf16_accumulates_fp32():
+    key = jax.random.PRNGKey(14)
+    st, factors = _mk(key, (64, 32, 16), 500, 16, jnp.bfloat16)
+    omega = st.with_values(jnp.ones_like(st.values))
+    bk = bucketize(omega, 0, block_rows=8)
+    fac = [None] + factors[1:]
+    x = jax.random.normal(key, (64, 16), jnp.bfloat16)
+    got = kops.cg_matvec_bucketed(bk, fac, x, num_rows=64, use_pallas=True)
+    assert got.dtype == jnp.bfloat16
+    f32 = [None] + [f.astype(jnp.float32) for f in factors[1:]]
+    bk32 = bucketize(omega.astype(jnp.float32), 0, block_rows=8)
+    want = kops.cg_matvec_bucketed(bk32, f32, x.astype(jnp.float32),
+                                   num_rows=64, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **BF16_TOL)

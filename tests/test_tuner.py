@@ -1,0 +1,227 @@
+"""Kernel-tile autotuner (repro.planner.tuner, DESIGN.md §13): lattice
+sweep, winner installation, obs counter accounting, and the persistent
+on-disk plan cache — the second run of a cached workload must perform
+ZERO timings, asserted on the tuner's obs counters."""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.core.sparse_tensor import SparseTensor
+from repro.kernels import tile as ktile
+from repro.kernels.tile import KernelTile
+from repro.planner import cost as pcost
+from repro.planner import tuner
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# small lattices keep the interpret-mode sweeps fast; default-first ordering
+# mirrors the production lattices (winner <= default by construction)
+TEST_LATTICES = {
+    "tttp": (KernelTile(), KernelTile(block_m=64)),
+    "mttkrp": (KernelTile(), KernelTile(block_m=64, schedule="segmented")),
+    "cg_matvec": (KernelTile(), KernelTile(block_m=64)),
+}
+
+
+@pytest.fixture
+def problem(monkeypatch):
+    monkeypatch.setattr(tuner, "LATTICES", TEST_LATTICES)
+    key = jax.random.PRNGKey(0)
+    st = SparseTensor.random(key, (24, 18, 12), 120, cap=140)
+    ks = jax.random.split(key, 3)
+    factors = [jax.random.normal(k, (d, 8)) for k, d in zip(ks, st.shape)]
+    omega = st.with_values(jnp.ones_like(st.values))
+    yield st, factors, omega
+    ktile.reset_tiles()
+    pcost.reset_rates()
+
+
+@pytest.fixture
+def registry():
+    obs.enable()
+    reg = obs.get_registry()
+    reg.reset()
+    yield reg
+    obs.disable()
+
+
+def _counter(reg, name):
+    return reg.counters.get(name, 0.0)
+
+
+def test_tune_family_installs_winner(problem, registry):
+    st, factors, omega = problem
+    result = tuner.tune_family("mttkrp", st, factors, omega=omega, iters=1)
+    assert result["tile"] in TEST_LATTICES["mttkrp"]
+    assert ktile.current_tile("mttkrp") == result["tile"]
+    assert result["seconds"] == min(s for _, s in result["timings"])
+    assert result["seconds"] > 0
+
+
+def test_tune_family_counters_and_plan_records(problem, registry):
+    st, factors, omega = problem
+    tuner.tune_family("tttp", st, factors, iters=1)
+    assert _counter(registry, "tuner/measurements") \
+        == len(TEST_LATTICES["tttp"])
+    keys = [k for k in registry.plans if k.startswith("autotune/tttp|")]
+    assert len(keys) == len(TEST_LATTICES["tttp"])
+    for k in keys:
+        rec = registry.plans[k]
+        assert rec.measured.count >= 1
+        assert rec.predicted["seconds"] > 0
+
+
+def test_second_run_zero_measurements(problem, registry, tmp_path):
+    """The acceptance bound: a rerun against the populated cache performs
+    no timings at all — every family is a cache hit."""
+    st, factors, omega = problem
+    cache = str(tmp_path / "plan_cache.json")
+    s1 = tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache,
+                            iters=1)
+    assert s1["hits"] == 0 and s1["measured"] == 6
+    measured_after_first = _counter(registry, "tuner/measurements")
+    winners1 = dict(s1["winners"])
+
+    ktile.reset_tiles()
+    pcost.reset_rates()
+    s2 = tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache,
+                            iters=1)
+    assert s2["measured"] == 0
+    assert s2["hits"] == 3
+    assert _counter(registry, "tuner/measurements") == measured_after_first
+    assert _counter(registry, "tuner/cache_hits") == 3
+    assert s2["winners"] == winners1
+    # the cached run restores the calibrated rates too
+    assert s2["rates"] == s1["rates"]
+    for f in ("tttp", "mttkrp", "cg_matvec"):
+        assert ktile.current_tile(f).short() == winners1[f]
+
+
+def test_cache_misses_on_lattice_version_bump(problem, registry, tmp_path,
+                                              monkeypatch):
+    st, factors, omega = problem
+    cache = str(tmp_path / "plan_cache.json")
+    tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache, iters=1)
+    monkeypatch.setattr(tuner, "LATTICE_VERSION", tuner.LATTICE_VERSION + 1)
+    s = tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache,
+                           iters=1)
+    assert s["hits"] == 0 and s["measured"] > 0
+
+
+def test_cache_misses_on_device_kind_change(problem, registry, tmp_path,
+                                            monkeypatch):
+    st, factors, omega = problem
+    cache = str(tmp_path / "plan_cache.json")
+    tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache, iters=1)
+    monkeypatch.setattr(tuner, "device_kind", lambda: "TPU v9000")
+    s = tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache,
+                           iters=1)
+    assert s["hits"] == 0 and s["measured"] > 0
+
+
+def test_cache_misses_on_signature_change(problem, registry, tmp_path):
+    st, factors, omega = problem
+    cache = str(tmp_path / "plan_cache.json")
+    tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache, iters=1)
+    f2 = [f[:, :4] for f in factors]  # different rank => different signature
+    s = tuner.ensure_tuned(st, f2, omega=omega, cache_path=cache, iters=1)
+    assert s["hits"] == 0 and s["measured"] > 0
+
+
+def test_cache_file_shape(problem, tmp_path):
+    st, factors, omega = problem
+    cache = str(tmp_path / "plan_cache.json")
+    tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache, iters=1)
+    with open(cache) as f:
+        data = json.load(f)
+    assert data["lattice_version"] == tuner.LATTICE_VERSION
+    assert len(data["entries"]) == 3
+    for key, entry in data["entries"].items():
+        dev, ver, family, sig = key.split("|", 3)
+        assert ver == f"v{tuner.LATTICE_VERSION}"
+        assert family in ("tttp", "mttkrp", "cg_matvec")
+        assert "shape=24x18x12" in sig
+        tile = KernelTile.from_json(entry["tile"])  # round-trips
+        assert tile in TEST_LATTICES[family]
+    assert data["rates"]["flop"] > 0
+
+
+def test_corrupt_cache_file_is_remeasured(problem, tmp_path):
+    st, factors, omega = problem
+    cache = str(tmp_path / "plan_cache.json")
+    with open(cache, "w") as f:
+        f.write("{not json")
+    s = tuner.ensure_tuned(st, factors, omega=omega, cache_path=cache,
+                           iters=1)
+    assert s["measured"] > 0
+    with open(cache) as f:
+        json.load(f)  # rewritten valid
+
+
+def test_no_cache_path_always_measures(problem):
+    st, factors, omega = problem
+    s1 = tuner.ensure_tuned(st, factors, omega=omega, cache_path="", iters=1,
+                            families=("tttp",))
+    s2 = tuner.ensure_tuned(st, factors, omega=omega, cache_path="", iters=1,
+                            families=("tttp",))
+    assert s1["measured"] > 0 and s2["measured"] > 0
+
+
+def test_cg_matvec_skipped_without_omega(problem):
+    st, factors, _ = problem
+    s = tuner.ensure_tuned(st, factors, iters=1)
+    assert set(s["winners"]) == {"tttp", "mttkrp"}
+
+
+def test_fenced_time_lands_in_registry(registry):
+    t = tuner.fenced_time(lambda: jnp.zeros(8), iters=2,
+                          span_name="tuner/unit")
+    assert t > 0
+    assert any(k.startswith("tuner/unit") for k in registry.timings)
+
+
+def test_calibrate_roundtrip():
+    try:
+        before = pcost.rates()
+        got = pcost.calibrate([(1e6, 1e5, 1e-3), (4e6, 2e5, 3.5e-3)])
+        assert got["flop"] > 0 and got["mem"] > 0
+        assert pcost.rates() == got
+        with pytest.raises(ValueError):
+            pcost.set_rates(flop=-1.0)
+    finally:
+        pcost.reset_rates()
+    assert pcost.rates() == {"flop": pcost.FLOP_RATE, "mem": pcost.MEM_RATE,
+                             "comm": pcost.COMM_RATE}
+    assert before == pcost.rates()
+
+
+@pytest.mark.slow
+def test_complete_cli_plan_cache_round_trip(tmp_path):
+    """Second `launch.complete --plan-cache` run reports zero measurements
+    (cache hit on every family)."""
+    cache = tmp_path / "plan.json"
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
+
+    def run(ck):
+        cmd = [sys.executable, "-m", "repro.launch.complete",
+               "--dims", "24,18,12", "--nnz", "500", "--rank", "6",
+               "--sweeps", "1", "--plan-cache", str(cache),
+               "--ckpt-dir", str(tmp_path / ck)]
+        p = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           cwd=REPO_ROOT, timeout=900)
+        assert p.returncode == 0, p.stderr
+        m = re.search(r"plan-cache: hits=(\d+) measured=(\d+)", p.stdout)
+        assert m, p.stdout
+        return int(m.group(1)), int(m.group(2))
+
+    hits1, measured1 = run("ck1")
+    assert hits1 == 0 and measured1 > 0
+    hits2, measured2 = run("ck2")
+    assert hits2 == 3 and measured2 == 0
