@@ -1,0 +1,104 @@
+"""Serving-layer load generator (DESIGN.md §14).
+
+Drives the three ``repro.serve.ServeEngine`` endpoints against a frozen
+synthetic model at serving-ish scale and emits the latency trajectory:
+
+* ``score_b{B}_p50`` / ``score_b{B}_p99`` — per-batch entry-scoring wall
+  latency over a batch-size sweep (the load generator streams a fixed
+  query budget through each batch size);
+* ``score_b{B}_qps`` — achieved end-to-end throughput for the same sweep.
+  QPS is higher-is-better, so these entries are informational only:
+  ``benchmarks.compare`` skips ``*_qps`` names when gating;
+* ``topk_*`` — blocked streaming top-k retrieval per batch of queries;
+* ``foldin_*`` — batched cold-user fold-in (one-row damped ALS) per batch.
+
+The model is synthesized (seeded) rather than fitted — the serving layer
+never looks at how factors were produced, and a deterministic model keeps
+the benchmark self-contained. Correctness parity vs the training kernels
+is covered by tests/test_serve.py and the serve-smoke CI job, not here.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.serve import ServeEngine, ServingModel, percentiles
+
+
+def _model(shape, rank: int, seed: int = 0) -> ServingModel:
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    factors = [jnp.asarray(rng.standard_normal((s, rank)).astype(np.float32)
+                           / np.sqrt(rank)) for s in shape]
+    return ServingModel(factors, link="identity",
+                        meta={"kind": "bench_synthetic"})
+
+
+def _score_sweep(engine: ServeEngine, shape, batch_sizes, num_queries: int,
+                 seed: int):
+    rng = np.random.default_rng(seed)
+    queries = np.stack([rng.integers(0, s, size=num_queries) for s in shape],
+                       axis=1).astype(np.int32)
+    jax.block_until_ready(engine.model.factors)
+    for bs in batch_sizes:
+        engine.score(queries[:bs])                 # compile outside the clock
+        if num_queries % bs:                       # ...and the tail's bucket
+            engine.score(queries[:num_queries % bs])
+        lat = []
+        # repro-lint: disable=JS003 -- engine.score fences internally (obs span fence) and returns host arrays
+        t_all = time.perf_counter()
+        for lo in range(0, num_queries, bs):
+            t0 = time.perf_counter()
+            engine.score(queries[lo:lo + bs])
+            lat.append(time.perf_counter() - t0)
+        # repro-lint: disable=JS003 -- engine.score fences internally (obs span fence) and returns host arrays
+        wall = time.perf_counter() - t_all
+        stats = percentiles(lat)
+        qps = num_queries / wall
+        emit(f"score_b{bs}_p50", stats["p50_us"],
+             f"batches={stats['calls']} p95={stats['p95_us']:.0f}us")
+        emit(f"score_b{bs}_p99", stats["p99_us"],
+             f"max={stats['max_us']:.0f}us")
+        emit(f"score_b{bs}_qps", qps,
+             "informational (higher is better; not perf-gated)")
+
+
+def run(quick: bool = False):
+    shape = (4_000, 2_000, 100) if quick else (40_000, 20_000, 200)
+    rank = 16
+    num_queries = 20_000 if quick else 100_000
+    model = _model(shape, rank)
+    engine = ServeEngine(model, max_batch=4096)
+
+    _score_sweep(engine, shape, (256, 1024, 4096), num_queries, seed=1)
+
+    # top-k retrieval over the largest mode ("items" = mode 0)
+    rng = np.random.default_rng(2)
+    b_users, k = 64, 10
+    fixed = {d: rng.integers(0, shape[d], size=b_users)
+             for d in range(1, len(shape))}
+    us = time_fn(lambda: engine.top_k(fixed, 0, k),
+                 warmup=2, iters=3 if quick else 7)
+    emit(f"topk_k{k}_b{b_users}", us,
+         f"mode0={shape[0]} rows, block={engine.topk_block}")
+
+    # cold-user fold-in: B users x nnz-entry histories through batched CG
+    b_cold, nnz = 64, 32
+    others = [d for d in range(len(shape)) if d != 0]
+    hists = []
+    for _ in range(b_cold):
+        oidx = np.stack([rng.integers(0, shape[d], size=nnz)
+                         for d in others], axis=1).astype(np.int32)
+        hists.append((oidx, rng.standard_normal(nnz).astype(np.float32)))
+    us = time_fn(lambda: engine.fold_in(hists, 0),
+                 warmup=2, iters=3 if quick else 7)
+    emit(f"foldin_b{b_cold}_nnz{nnz}", us,
+         f"{us / b_cold:.0f}us/user, rank={rank}")
+
+
+if __name__ == "__main__":
+    run(quick=os.environ.get("QUICK", "0") == "1")

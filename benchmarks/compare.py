@@ -13,6 +13,10 @@ than its committed baseline by more than the configured tolerance
   baseline can be refreshed deliberately);
 * timings below ``--min-us`` are skipped: at tens of microseconds the
   dispatch jitter on shared CI runners swamps any real signal;
+* ``*_qps``-suffixed entries are throughputs (higher is better) and
+  ``*_p99`` entries are tail percentiles (max-statistics at CI sample
+  counts, far noisier than medians) — both are recorded for the
+  trajectory but never gated by the slower-than ratio;
 * negative timings are sentinels (``-1`` = OOM-budget skip) and ignored;
 * ``--normalize median`` divides every ratio by the median ratio across
   all compared entries before applying the tolerance. A uniformly slower
@@ -81,7 +85,11 @@ def compare(baseline: Dict[str, Dict[str, float]],
             b, c = base[name], cur[name]
             if b <= 0 or c <= 0:          # sentinel (-1 = skipped/OOM)
                 continue
-            skip = b < min_us and c < min_us
+            # *_qps entries are throughput (higher is better) and *_p99
+            # tail percentiles are max-statistics at CI sample counts —
+            # both recorded for the trajectory, neither ratio-gated
+            skip = (b < min_us and c < min_us) \
+                or name.endswith(("_qps", "_p99"))
             rows.append({"group": group, "name": name, "baseline_us": b,
                          "current_us": c, "ratio": c / b, "skipped": skip})
     gated = [r for r in rows if not r["skipped"]]

@@ -21,8 +21,8 @@ import traceback
 from benchmarks import (bench_ccd_variants, bench_completion,
                         bench_distributed, bench_gauss_newton, bench_gcp,
                         bench_ingest, bench_kernels, bench_mttkrp,
-                        bench_planner, bench_redistribution, bench_ttm,
-                        bench_tttp)
+                        bench_planner, bench_redistribution, bench_serve,
+                        bench_ttm, bench_tttp)
 from benchmarks.common import drain_records
 
 # (csv prefix, module, json group)
@@ -39,6 +39,7 @@ MODULES = [
     ("sec5_kernel_tiles", bench_kernels, "kernels"),
     ("ggn_gauss_newton", bench_gauss_newton, "completion"),
     ("sec4_distributed_completion", bench_distributed, "distributed"),
+    ("serve_endpoints", bench_serve, "serve"),
 ]
 
 

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence, Set
 
 DEFAULT_ROOTS = (
     "repro.launch.complete",      # completion CLI (all algorithms, any mesh)
+    "repro.launch.serve_complete",  # serving CLI on frozen factors (§14)
     "repro.launch.experiment",    # named experiment specs / nightly sweeps
     "repro.launch.report",        # PERF.md / dryrun-table renderer
     "repro.core.api",             # the public einsum/TTTP library surface

@@ -1,4 +1,4 @@
 from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
-                                           restore, save)
+                                           read_manifest, restore, save)
 
-__all__ = ["Checkpointer", "latest_step", "restore", "save"]
+__all__ = ["Checkpointer", "latest_step", "read_manifest", "restore", "save"]

@@ -61,7 +61,10 @@ def save(directory: str, step: int, state, metadata: Optional[dict] = None,
 
 def _gc(directory: str, keep_last: int):
     steps = sorted(_list_steps(directory))
-    for s in steps[:-keep_last]:
+    # keep_last=0 means "keep nothing": steps[:-0] is the EMPTY slice, which
+    # silently kept everything — slice only when there is a tail to keep
+    doomed = steps[:-keep_last] if keep_last > 0 else steps
+    for s in doomed:
         shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
                       ignore_errors=True)
 
@@ -82,18 +85,63 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_manifest(directory: str, step: int) -> dict:
+    """The committed manifest of one step (treedef keys, per-leaf
+    shape/dtype, user metadata) — the structure-discovery entry point for
+    consumers that must rebuild a ``like`` pytree from disk alone (the
+    serving layer restoring frozen factors, ``repro.serve.model``)."""
+    path = os.path.join(directory, f"step_{step:09d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _validate_leaf(path: str, key: str, arr: np.ndarray, entry: dict,
+                   like_leaf) -> None:
+    """Fail fast, naming the offending leaf: (a) the on-disk array must match
+    the manifest record (corruption / partial write), (b) the manifest record
+    must match the restore target (structure drift — e.g. the rank changed
+    between fit and serve, which previously surfaced only as an opaque jit
+    shape error much later)."""
+    m_shape = tuple(entry["shape"])
+    if tuple(arr.shape) != m_shape or str(arr.dtype) != entry["dtype"]:
+        raise ValueError(
+            f"checkpoint {path}: leaf {key!r} on disk is "
+            f"{tuple(arr.shape)}/{arr.dtype} but the manifest records "
+            f"{m_shape}/{entry['dtype']} — corrupted or partially written")
+    like_shape = tuple(np.shape(like_leaf))
+    if like_shape != m_shape:
+        raise ValueError(
+            f"checkpoint {path}: leaf {key!r} has shape {m_shape} but the "
+            f"restore target expects {like_shape} — checkpoint/structure "
+            f"drift (e.g. rank changed between fit and serve)")
+    if hasattr(like_leaf, "dtype") and np.dtype(like_leaf.dtype) != arr.dtype:
+        raise ValueError(
+            f"checkpoint {path}: leaf {key!r} has dtype {arr.dtype} but the "
+            f"restore target expects {np.dtype(like_leaf.dtype)}")
+
+
 def restore(directory: str, step: int, like,
             shard_fn: Optional[Callable[[str, np.ndarray], Any]] = None):
     """Restore into the structure of ``like``. ``shard_fn(key, arr)`` may
     device_put each leaf with a target sharding (elastic restore path);
-    default is plain host arrays fed to jnp."""
+    default is plain host arrays fed to jnp. Every loaded leaf is validated
+    against the manifest's recorded shape/dtype AND the ``like`` structure —
+    a drifted checkpoint fails here with the leaf named, not later inside
+    jit."""
     path = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     leaves = _leaf_paths(like)
+    recorded = manifest.get("leaves", {})
+    missing = sorted(set(leaves) - set(recorded))
+    if missing:
+        raise ValueError(
+            f"checkpoint {path}: leaves {missing} absent from the manifest "
+            f"(it records {sorted(recorded)}) — structure drift")
     out = {}
-    for key in leaves:
+    for key, like_leaf in leaves.items():
         arr = np.load(os.path.join(path, key + ".npy"))
+        _validate_leaf(path, key, arr, recorded[key], like_leaf)
         out[key] = shard_fn(key, arr) if shard_fn else arr
     flat, treedef = jax.tree_util.tree_flatten(like)
     paths = list(_leaf_paths(like).keys())
@@ -103,12 +151,20 @@ def restore(directory: str, step: int, like,
 
 class Checkpointer:
     """Async checkpointer: save() returns immediately, the write happens on a
-    background thread (overlaps I/O with the next steps); wait() joins."""
+    background thread (overlaps I/O with the next steps); wait() joins.
+
+    A failed background write (disk full, bad leaf) is NOT silently
+    swallowed: the worker exception is captured and re-raised — prefixed
+    with the step it belongs to — at the next ``wait()`` or ``save_async()``
+    call, so a caller cannot keep training against a checkpoint directory
+    that is quietly serving a stale step."""
 
     def __init__(self, directory: str, keep_last: int = 3):
         self.directory = directory
         self.keep_last = keep_last
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._error_step: Optional[int] = None
 
     def save_async(self, step: int, state, metadata: Optional[dict] = None):
         self.wait()
@@ -121,7 +177,12 @@ class Checkpointer:
             metadata = json.loads(json.dumps(metadata))
 
         def work():
-            save(self.directory, step, host_state, metadata, self.keep_last)
+            try:
+                save(self.directory, step, host_state, metadata,
+                     self.keep_last)
+            except BaseException as e:   # re-raised on the caller's thread
+                self._error = e
+                self._error_step = step
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -130,6 +191,12 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, step = self._error, self._error_step
+            self._error = self._error_step = None
+            raise RuntimeError(
+                f"async checkpoint save of step {step} failed; the newest "
+                f"on-disk checkpoint is stale") from err
 
     def latest(self) -> Optional[int]:
         return latest_step(self.directory)

@@ -84,8 +84,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "timings. Default: $REPRO_PLAN_CACHE; unset "
                          "disables tuning")
     ap.add_argument("--dump-factors", default=None, metavar="PATH",
-                    help="write the final factor matrices to PATH (.npz, "
-                         "keys factor_0..factor_{N-1})")
+                    help="write the final factor matrices to PATH. A .npz "
+                         "path keeps the legacy flat format (keys "
+                         "factor_0..factor_{N-1}); any other path becomes "
+                         "a repro.checkpoint step directory with the fit "
+                         "metadata (rank/shape/loss/link) in the manifest "
+                         "— the format launch/serve_complete.py restores")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_completion_ckpt")
     return ap
 
@@ -306,8 +310,21 @@ def main():
               f"(all {args.sweeps} sweeps restored from {args.ckpt_dir})")
     if args.dump_factors:
         fs = get_factors(final)
-        np.savez(args.dump_factors,
-                 **{f"factor_{d}": np.asarray(f) for d, f in enumerate(fs)})
+        if args.dump_factors.endswith(".npz"):
+            np.savez(args.dump_factors,
+                     **{f"factor_{d}": np.asarray(f)
+                        for d, f in enumerate(fs)})
+        else:
+            from repro import checkpoint as ckpt
+            link = "log" if args.loss.endswith("_log") else "identity"
+            ckpt.save(args.dump_factors, args.sweeps,
+                      {f"factor_{d}": f for d, f in enumerate(fs)},
+                      metadata={"kind": "cp_factors", "rank": r,
+                                "shape": list(shape),
+                                "algorithm": args.algorithm,
+                                "loss": args.loss, "link": link,
+                                "dataset": args.dataset,
+                                "nnz": int(st.nnz), "sweeps": args.sweeps})
         print(f"wrote factors to {args.dump_factors}")
 
 

@@ -1,0 +1,31 @@
+"""Real-time recommendation serving on frozen factors (DESIGN.md §14).
+
+The training side of the repo fits CP factor matrices at Netflix scale;
+this package *uses* them: restore a frozen-factor checkpoint and answer
+
+* batched entry scoring — predict (i, j, k) via the multilinear CP model
+  (``link="log"`` evaluates in rate space, matching the ``*_log`` losses);
+* per-user fold-in for cold requests — one damped one-row ALS solve
+  against the frozen factors, i.e. batched CG on the paper's eq.-3
+  weighted Gram matvec (``als.gram_matvec`` / the CG_MATVEC planner
+  family), no retraining;
+* top-k item retrieval — blocked matmul over the item factor with a
+  streaming top-k merge, never materializing the full score row.
+
+Layering::
+
+    model.py    ServingModel — frozen factors + link, checkpoint/npz load
+    foldin.py   history packing + batched one-row ALS fold-in
+    topk.py     query vectors + blocked streaming top-k
+    engine.py   ServeEngine — jit'd batched endpoints, obs.span'd
+"""
+from repro.serve.engine import ServeEngine, percentiles
+from repro.serve.foldin import fold_in, fold_in_single, pack_histories
+from repro.serve.model import ServingModel, apply_link, load_factors
+from repro.serve.topk import query_rows, topk_over_mode
+
+__all__ = [
+    "ServeEngine", "ServingModel", "apply_link", "fold_in",
+    "fold_in_single", "load_factors", "pack_histories", "percentiles",
+    "query_rows", "topk_over_mode",
+]

@@ -1,0 +1,167 @@
+"""ServeEngine: the batched query front-end over a frozen ServingModel.
+
+Requests arrive as host arrays of arbitrary size; the engine pads each
+batch up to a power-of-two bucket (bounding jit recompiles to
+O(log max_batch) per endpoint) and dispatches jit-compiled kernels:
+
+* ``score``   — entry scoring via the gather→Hadamard→rank-sum chain, or
+                via a forced planner TTTP path (``score_path=``) so the
+                parity of serving vs training dispatch is testable;
+* ``top_k``   — query-vector build + blocked streaming top-k
+                (``serve.topk``), retrieval over any mode;
+* ``fold_in`` — batched one-row ALS on the eq.-3 Gram matvec
+                (``serve.foldin``), capacity padded to buckets.
+
+Every endpoint is wrapped in an ``obs.span`` (fenced — the span covers
+the device work, not just dispatch) and feeds per-endpoint counters, so
+an enabled trace shows the serving latency breakdown next to the planner
+and kernel spans it triggers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.sparse_tensor import SparseTensor
+from repro.serve import foldin as _foldin
+from repro.serve import topk as _topk
+from repro.serve.model import ServingModel, apply_link, multilinear_scores
+
+
+def percentiles(samples_s: Sequence[float]) -> Dict[str, float]:
+    """Load-generator summary of per-call wall times (seconds in,
+    microseconds out): p50/p95/p99/mean/max over the sample set."""
+    if not samples_s:
+        return {}
+    xs = np.sort(np.asarray(samples_s, np.float64)) * 1e6
+    pick = lambda q: float(xs[min(len(xs) - 1, int(q * len(xs)))])
+    return {"p50_us": pick(0.50), "p95_us": pick(0.95),
+            "p99_us": pick(0.99), "mean_us": float(xs.mean()),
+            "max_us": float(xs.max()), "calls": len(xs)}
+
+
+def _bucket(n: int, lo: int, hi: int) -> int:
+    b = lo
+    while b < min(n, hi):
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    """Stateless-per-request serving over one frozen :class:`ServingModel`.
+
+    ``score_path`` forces the scoring contraction through a planner TTTP
+    candidate (``all_at_once``/``sliced``/``pairwise``/``dense``) instead
+    of the direct gather chain; ``foldin_matvec_path`` routes fold-in's
+    Gram matvec through the CG_MATVEC family the same way."""
+
+    def __init__(self, model: ServingModel, max_batch: int = 4096,
+                 min_batch: int = 64, topk_block: int = 4096,
+                 score_path: Optional[str] = None,
+                 foldin_lam: float = 1e-2,
+                 foldin_matvec_path: Optional[str] = None):
+        self.model = model
+        self.max_batch = int(max_batch)
+        self.min_batch = int(min_batch)
+        self.topk_block = int(topk_block)
+        self.score_path = score_path
+        self.foldin_lam = float(foldin_lam)
+        self.foldin_matvec_path = foldin_matvec_path
+        self._score_jit = jax.jit(self._score_impl,
+                                  static_argnames=("link",))
+        self._topk_jit = jax.jit(self._topk_impl,
+                                 static_argnames=("target_mode", "k"))
+        self._foldin_jit = jax.jit(self._foldin_impl,
+                                   static_argnames=("mode",))
+
+    # -- jitted kernels (factors passed as args: one trace per bucket) -----
+    def _score_impl(self, factors, idx, link: str):
+        if self.score_path is None:
+            m = multilinear_scores(factors, idx)
+        else:
+            from repro.planner import planned_tttp
+            ones = jnp.ones((idx.shape[0],), factors[0].dtype)
+            st = SparseTensor(idx, ones, jnp.ones_like(ones, bool),
+                              self.model.shape)
+            m = planned_tttp(st, list(factors), path=self.score_path).values
+        return apply_link(m, link)
+
+    def _topk_impl(self, factors, fixed, target_mode: int, k: int):
+        q = _topk.query_rows(factors, fixed)
+        return _topk.topk_over_mode(factors[target_mode], q, k,
+                                    block_rows=self.topk_block,
+                                    link=self.model.link)
+
+    def _foldin_impl(self, st_hist, factors, mode: int):
+        rows, iters = _foldin.fold_in(
+            st_hist, list(factors), mode, lam=self.foldin_lam,
+            matvec_path=self.foldin_matvec_path)
+        return rows, iters
+
+    # -- endpoints ----------------------------------------------------------
+    def score(self, indices, link: Optional[bool] = True) -> np.ndarray:
+        """(n,) predictions for (n, ndim) entry indices. ``link=False``
+        returns raw model-space values."""
+        idx = np.asarray(indices, np.int32)
+        if idx.ndim != 2 or idx.shape[1] != self.model.ndim:
+            raise ValueError(f"score expects (n, {self.model.ndim}) "
+                             f"indices, got {idx.shape}")
+        n = idx.shape[0]
+        lk = self.model.link if link else "identity"
+        fs = tuple(self.model.factors)
+        out = np.empty((n,), np.dtype(fs[0].dtype))
+        with obs.span("serve/score", n=n, link=lk,
+                      path=self.score_path or "gather") as sp:
+            for lo in range(0, n, self.max_batch):
+                chunk = idx[lo:lo + self.max_batch]
+                b = _bucket(chunk.shape[0], self.min_batch, self.max_batch)
+                pad = np.zeros((b, idx.shape[1]), np.int32)
+                pad[:chunk.shape[0]] = chunk
+                vals = sp.fence(self._score_jit(fs, jnp.asarray(pad), lk))
+                out[lo:lo + chunk.shape[0]] = \
+                    np.asarray(vals)[:chunk.shape[0]]
+            obs.counter_add("serve/queries", n)
+        return out
+
+    def top_k(self, fixed: Mapping[int, np.ndarray], target_mode: int,
+              k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-query top-k over ``target_mode``: ``fixed`` maps each other
+        mode to (B,) indices or (B, R) rows; returns (scores, indices),
+        each (B, k), scores descending."""
+        if target_mode in fixed:
+            raise ValueError(f"target mode {target_mode} cannot be fixed")
+        fx = {int(d): jnp.asarray(v) for d, v in fixed.items()}
+        sizes = {int(v.shape[0]) for v in fx.values()}
+        if len(sizes) != 1:
+            raise ValueError(f"fixed modes disagree on batch: {sizes}")
+        b = sizes.pop()
+        fs = tuple(self.model.factors)
+        with obs.span("serve/top_k", b=b, k=k,
+                      target_mode=target_mode) as sp:
+            vals, idx = sp.fence(self._topk_jit(fs, fx, target_mode,
+                                                int(k)))
+            obs.counter_add("serve/topk_queries", b)
+        return np.asarray(vals), np.asarray(idx)
+
+    def fold_in(self, histories: Sequence[_foldin.History],
+                mode: int) -> np.ndarray:
+        """(B, R) fresh factor rows for B cold users' histories over the
+        other modes (see ``serve.foldin``)."""
+        total = sum(len(np.asarray(v).reshape(-1)) for _, v in histories)
+        cap = _bucket(max(total, 1), self.min_batch, 1 << 30)
+        st = _foldin.pack_histories(histories, self.model.shape, mode,
+                                    cap=cap)
+        # drop the exact-nnz static hint: it varies per request batch and
+        # would force a retrace per distinct history size
+        st = dataclasses.replace(st, nnz=None)
+        fs = tuple(self.model.factors)
+        with obs.span("serve/fold_in", b=len(histories), nnz=total,
+                      cap=cap, mode=mode) as sp:
+            rows, _ = sp.fence(self._foldin_jit(st, fs, mode))
+            obs.counter_add("serve/foldin_users", len(histories))
+        return np.asarray(rows)

@@ -1,0 +1,157 @@
+"""ServingModel: frozen CP factors + link, restored from a checkpoint.
+
+The serving layer trusts exactly two on-disk formats, both written by
+``launch/complete.py --dump-factors``:
+
+* a ``repro.checkpoint`` step directory — state ``{"factor_<d>": A_d}``
+  with the fit's metadata (rank, shape, loss, link) in the manifest; the
+  restore path goes through :func:`repro.checkpoint.restore`, so every
+  leaf is validated against the manifest's recorded shape/dtype and a
+  drifted checkpoint (e.g. rank changed between fit and serve) fails
+  fast naming the offending factor;
+* a legacy ``.npz`` with keys ``factor_0..factor_{N-1}`` (no metadata —
+  the caller supplies the link).
+
+Scoring is the CP model itself:  m(i1..iN) = Σ_r Π_d A_d[i_d, r], with
+``link="log"`` mapping to rate space as  exp(clip(m, ±30)) — the same
+clamp ``data.streaming.heldout_metrics`` evaluates with, so a served
+score is bit-comparable to the fit's held-out metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LINKS = ("identity", "log")
+# rate-space clamp — keep in sync with data.streaming.heldout_metrics
+_LOG_CLIP = 30.0
+
+
+def apply_link(m: jax.Array, link: str) -> jax.Array:
+    """Model-space → prediction-space. ``log`` predicts rates exp(m) with
+    the heldout_metrics clamp; ``identity`` is a no-op."""
+    if link == "identity":
+        return m
+    if link == "log":
+        return jnp.exp(jnp.clip(m, -_LOG_CLIP, _LOG_CLIP))
+    raise ValueError(f"unknown link {link!r}; choices: {LINKS}")
+
+
+def multilinear_scores(factors: Sequence[jax.Array],
+                       indices: jax.Array) -> jax.Array:
+    """Batched CP entry scores: (B, ndim) int indices → (B,) model values.
+
+    The gather→Hadamard→rank-sum chain of ``core.tttp.multilinear_values``
+    without the SparseTensor wrapper — the serving hot path."""
+    prod = factors[0][indices[:, 0]]
+    for d in range(1, len(factors)):
+        prod = prod * factors[d][indices[:, d]]
+    return jnp.sum(prod, axis=1)
+
+
+@dataclasses.dataclass
+class ServingModel:
+    """Frozen factors + link + fit metadata. Factors are never mutated by
+    the serving layer; fold-in returns *new* rows, it does not write back."""
+
+    factors: List[jax.Array]
+    link: str = "identity"
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.factors:
+            raise ValueError("ServingModel needs at least one factor")
+        ranks = {int(f.shape[1]) for f in self.factors}
+        if len(ranks) != 1:
+            raise ValueError(f"factors disagree on rank: {sorted(ranks)}")
+        if self.link not in LINKS:
+            raise ValueError(f"unknown link {self.link!r}; choices: {LINKS}")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(int(f.shape[0]) for f in self.factors)
+
+    @property
+    def rank(self) -> int:
+        return int(self.factors[0].shape[1])
+
+    @property
+    def ndim(self) -> int:
+        return len(self.factors)
+
+    def raw_scores(self, indices: jax.Array) -> jax.Array:
+        """(B,) model-space values at the given (B, ndim) entries."""
+        return multilinear_scores(self.factors, indices)
+
+    def predict(self, indices: jax.Array) -> jax.Array:
+        """(B,) predictions with the link applied (rates under ``log``)."""
+        return apply_link(self.raw_scores(indices), self.link)
+
+
+def _factors_from_arrays(arrays: Dict[int, np.ndarray]) -> List[jax.Array]:
+    modes = sorted(arrays)
+    if modes != list(range(len(modes))):
+        raise ValueError(f"factor modes not contiguous from 0: {modes}")
+    return [jnp.asarray(arrays[d]) for d in modes]
+
+
+def _load_npz(path: str) -> List[jax.Array]:
+    with np.load(path) as z:
+        arrays = {}
+        for key in z.files:
+            m = re.fullmatch(r"factor_(\d+)", key)
+            if m:
+                arrays[int(m.group(1))] = z[key]
+    if not arrays:
+        raise ValueError(f"{path}: no factor_<d> arrays found")
+    return _factors_from_arrays(arrays)
+
+
+def _load_checkpoint(path: str, step: Optional[int]):
+    from repro import checkpoint as ckpt
+
+    if step is None:
+        step = ckpt.latest_step(path)
+        if step is None:
+            raise ValueError(f"{path}: no committed checkpoint steps found")
+    manifest = ckpt.read_manifest(path, step)
+    # rebuild the `like` pytree from the manifest alone — the serving
+    # process knows nothing about the fit's rank/shape until it reads this
+    shapes: Dict[int, tuple] = {}
+    for key, ent in manifest.get("leaves", {}).items():
+        m = re.search(r"factor_(\d+)", key)
+        if m:
+            shapes[int(m.group(1))] = (tuple(ent["shape"]),
+                                       np.dtype(ent["dtype"]))
+    if not shapes:
+        raise ValueError(
+            f"{path} step {step}: manifest has no factor_<d> leaves "
+            f"(records {sorted(manifest.get('leaves', {}))}) — not a "
+            f"factor checkpoint")
+    like = {f"factor_{d}": jnp.zeros(sh, dt)
+            for d, (sh, dt) in shapes.items()}
+    state, manifest = ckpt.restore(path, step, like)
+    arrays = {d: state[f"factor_{d}"] for d in shapes}
+    return _factors_from_arrays(arrays), manifest.get("metadata", {}) or {}
+
+
+def load_factors(path: str, link: Optional[str] = None,
+                 step: Optional[int] = None) -> ServingModel:
+    """Restore a :class:`ServingModel` from ``path``.
+
+    A directory is treated as a ``repro.checkpoint`` root (newest step
+    unless ``step`` is given; metadata supplies the link unless ``link``
+    overrides); a ``.npz`` file as the legacy ``--dump-factors`` format
+    (link defaults to identity)."""
+    if os.path.isdir(path):
+        factors, meta = _load_checkpoint(path, step)
+    else:
+        factors, meta = _load_npz(path), {}
+    resolved = link or meta.get("link") or "identity"
+    return ServingModel(factors, link=resolved, meta=meta)

@@ -1,0 +1,300 @@
+"""Serving layer (repro.serve, DESIGN.md §14): batched scoring parity vs
+the training kernels across every planner path, fold-in vs a fresh
+explicit one-row ALS solve, streaming top-k vs a full sort, engine
+padding/bucketing invariants, and checkpoint/npz restore — plus the
+end-to-end fit → dump → serve CLI under ``--verify`` (slow)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core.sparse_tensor import SparseTensor
+from repro.core.tttp import multilinear_values
+from repro.serve import (ServeEngine, ServingModel, apply_link, fold_in,
+                         fold_in_single, load_factors, pack_histories,
+                         query_rows, topk_over_mode)
+
+SHAPE = (30, 24, 10)
+RANK = 6
+
+
+def _factors(seed=0, shape=SHAPE, rank=RANK):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((s, rank)).astype(np.float32)
+                        / np.sqrt(rank)) for s in shape]
+
+
+def _queries(rng, n, shape=SHAPE):
+    return np.stack([rng.integers(0, s, size=n) for s in shape],
+                    axis=1).astype(np.int32)
+
+
+def _ref_scores(factors, idx, link="identity"):
+    st = SparseTensor.from_coo(idx, np.ones(idx.shape[0], np.float32), SHAPE)
+    m = multilinear_values(st, list(factors))
+    return np.asarray(apply_link(m, link))[:idx.shape[0]]
+
+
+def _histories(rng, mode, users, nnz, shape=SHAPE):
+    others = [d for d in range(len(shape)) if d != mode]
+    return [(np.stack([rng.integers(0, shape[d], size=nnz) for d in others],
+                      axis=1).astype(np.int32),
+             rng.standard_normal(nnz).astype(np.float32))
+            for _ in range(users)]
+
+
+def _explicit_rows(factors, histories, mode, lam):
+    """Fresh one-row ALS by explicit Gram assembly (the reference the
+    batched CG path must reproduce)."""
+    fs = [np.asarray(f) for f in factors]
+    others = [d for d in range(len(fs)) if d != mode]
+    rows = []
+    for oidx, vals in histories:
+        kr = fs[others[0]][oidx[:, 0]]
+        for c, d in enumerate(others[1:], start=1):
+            kr = kr * fs[d][oidx[:, c]]
+        gram = kr.T @ kr + lam * np.eye(kr.shape[1], dtype=kr.dtype)
+        rows.append(np.linalg.solve(gram, kr.T @ vals))
+    return np.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# entry scoring: engine == multilinear_values across every dispatch path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path",
+                         [None, "all_at_once", "sliced", "pairwise", "dense"])
+def test_score_matches_multilinear_values(path):
+    model = ServingModel(_factors())
+    engine = ServeEngine(model, max_batch=64, min_batch=8, score_path=path)
+    idx = _queries(np.random.default_rng(1), 200)   # > max_batch: chunks
+    got = engine.score(idx)
+    np.testing.assert_allclose(got, _ref_scores(model.factors, idx),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 7, 63, 64, 65, 130])
+def test_score_padding_buckets(n):
+    """Every batch size — including bucket boundaries and chunk tails —
+    returns exactly n untainted scores."""
+    model = ServingModel(_factors(2))
+    engine = ServeEngine(model, max_batch=64, min_batch=8)
+    idx = _queries(np.random.default_rng(n), n)
+    got = engine.score(idx)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(got, _ref_scores(model.factors, idx),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_score_log_link_and_raw():
+    model = ServingModel(_factors(3), link="log")
+    engine = ServeEngine(model, max_batch=32, min_batch=8)
+    idx = _queries(np.random.default_rng(5), 50)
+    np.testing.assert_allclose(
+        engine.score(idx), _ref_scores(model.factors, idx, link="log"),
+        rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(                       # link=False: model space
+        engine.score(idx, link=False), _ref_scores(model.factors, idx),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_score_rejects_bad_shape():
+    engine = ServeEngine(ServingModel(_factors()))
+    with pytest.raises(ValueError, match="indices"):
+        engine.score(np.zeros((5, 2), np.int32))      # ndim is 3
+
+
+# ---------------------------------------------------------------------------
+# fold-in: batched CG on the eq.-3 Gram matvec == explicit fresh solve
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("matvec_path",
+                         [None, "tttp_mttkrp", "sliced", "dense"])
+def test_fold_in_matches_explicit_solve(matvec_path):
+    fs = _factors(7)
+    rng = np.random.default_rng(7)
+    lam = 1e-2
+    hists = _histories(rng, mode=0, users=9, nnz=12)
+    st = pack_histories(hists, SHAPE, mode=0)
+    rows, iters = fold_in(st, fs, mode=0, lam=lam, matvec_path=matvec_path)
+    ref = _explicit_rows(fs, hists, mode=0, lam=lam)
+    assert int(iters) <= 4 * RANK
+    np.testing.assert_allclose(np.asarray(rows), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_fold_in_nonzero_mode_and_single():
+    fs = _factors(8)
+    rng = np.random.default_rng(8)
+    hists = _histories(rng, mode=1, users=5, nnz=10)
+    st = pack_histories(hists, SHAPE, mode=1)
+    rows, _ = fold_in(st, fs, mode=1, lam=5e-2)
+    ref = _explicit_rows(fs, hists, mode=1, lam=5e-2)
+    np.testing.assert_allclose(np.asarray(rows), ref, rtol=1e-4, atol=1e-4)
+    # single-user wrapper == the corresponding batched row
+    row0 = fold_in_single(fs, 1, hists[0][0], hists[0][1], SHAPE, lam=5e-2)
+    np.testing.assert_allclose(np.asarray(row0), ref[0], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_fold_in_engine_endpoint():
+    model = ServingModel(_factors(9))
+    engine = ServeEngine(model, min_batch=8, foldin_lam=1e-2)
+    rng = np.random.default_rng(9)
+    hists = _histories(rng, mode=0, users=6, nnz=8)
+    rows = engine.fold_in(hists, 0)
+    ref = _explicit_rows(model.factors, hists, mode=0, lam=1e-2)
+    assert rows.shape == (6, RANK)
+    np.testing.assert_allclose(rows, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_pack_histories_bounds_check():
+    bad = [(np.array([[99, 0]], np.int32), np.ones(1, np.float32))]
+    with pytest.raises(ValueError, match="out of range"):
+        pack_histories(bad, SHAPE, mode=0)    # mode-1 extent is 24 < 99
+
+
+# ---------------------------------------------------------------------------
+# top-k: streaming blocked merge == full sort, non-divisible blocks
+# ---------------------------------------------------------------------------
+
+def test_topk_matches_full_sort_nondivisible():
+    rng = np.random.default_rng(11)
+    j, r, b, k = 37, 5, 4, 6                 # 37 % block(8) != 0
+    vf = jnp.asarray(rng.standard_normal((j, r)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((b, r)).astype(np.float32))
+    vals, idx = topk_over_mode(vf, q, k, block_rows=8)
+    full = np.asarray(q) @ np.asarray(vf).T             # (B, J)
+    ref_idx = np.argsort(-full, axis=1)[:, :k]
+    np.testing.assert_array_equal(np.asarray(idx), ref_idx)
+    np.testing.assert_allclose(np.asarray(vals),
+                               np.take_along_axis(full, ref_idx, axis=1),
+                               rtol=1e-5, atol=1e-6)
+    # scores descending per row
+    assert np.all(np.diff(np.asarray(vals), axis=1) <= 1e-6)
+
+
+def test_topk_k_clamped_and_log_link():
+    rng = np.random.default_rng(12)
+    vf = jnp.asarray(rng.standard_normal((9, 4)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((3, 4)).astype(np.float32))
+    vals, idx = topk_over_mode(vf, q, 50, block_rows=4, link="log")
+    assert vals.shape == (3, 9)              # k clamped to J
+    full = np.asarray(q) @ np.asarray(vf).T
+    ref_idx = np.argsort(-full, axis=1)      # monotone link: same winners
+    np.testing.assert_array_equal(np.asarray(idx), ref_idx)
+    np.testing.assert_allclose(np.asarray(vals),
+                               np.exp(np.take_along_axis(full, ref_idx, 1)),
+                               rtol=1e-5)
+
+
+def test_engine_topk_with_foldin_rows():
+    """Retrieval for brand-new users: fixed mode given as explicit (B, R)
+    fold-in rows instead of indices into a frozen factor."""
+    model = ServingModel(_factors(13))
+    engine = ServeEngine(model, topk_block=8)
+    rng = np.random.default_rng(13)
+    b, k = 4, 5
+    rows = rng.standard_normal((b, RANK)).astype(np.float32)
+    kidx = rng.integers(0, SHAPE[2], size=b)
+    vals, idx = engine.top_k({0: rows, 2: kidx}, target_mode=1, k=k)
+    q = rows * np.asarray(model.factors[2])[kidx]
+    full = q @ np.asarray(model.factors[1]).T
+    ref_idx = np.argsort(-full, axis=1)[:, :k]
+    np.testing.assert_array_equal(idx, ref_idx)
+    np.testing.assert_allclose(vals, np.take_along_axis(full, ref_idx, 1),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_engine_topk_rejects_fixed_target_and_ragged_batch():
+    engine = ServeEngine(ServingModel(_factors()))
+    with pytest.raises(ValueError, match="cannot be fixed"):
+        engine.top_k({0: np.zeros(2, np.int32), 1: np.zeros(2, np.int32)},
+                     target_mode=1, k=3)
+    with pytest.raises(ValueError, match="disagree"):
+        engine.top_k({0: np.zeros(2, np.int32), 2: np.zeros(3, np.int32)},
+                     target_mode=1, k=3)
+
+
+def test_query_rows_needs_a_fixed_mode():
+    with pytest.raises(ValueError, match="fixed mode"):
+        query_rows(_factors(), {})
+
+
+# ---------------------------------------------------------------------------
+# restore: checkpoint directory and legacy npz
+# ---------------------------------------------------------------------------
+
+def test_load_factors_checkpoint_roundtrip(tmp_path):
+    fs = _factors(21)
+    ckpt.save(str(tmp_path), 4,
+              {f"factor_{d}": f for d, f in enumerate(fs)},
+              metadata={"link": "log", "rank": RANK})
+    model = load_factors(str(tmp_path))
+    assert model.shape == SHAPE and model.rank == RANK
+    assert model.link == "log"               # resolved from metadata
+    for a, b in zip(model.factors, fs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # explicit link overrides metadata
+    assert load_factors(str(tmp_path), link="identity").link == "identity"
+
+
+def test_load_factors_npz(tmp_path):
+    fs = _factors(22)
+    path = tmp_path / "factors.npz"
+    np.savez(path, **{f"factor_{d}": np.asarray(f)
+                      for d, f in enumerate(fs)})
+    model = load_factors(str(path))
+    assert model.link == "identity" and model.shape == SHAPE
+    idx = _queries(np.random.default_rng(2), 20)
+    np.testing.assert_allclose(np.asarray(model.predict(jnp.asarray(idx))),
+                               _ref_scores(fs, idx), rtol=1e-6, atol=1e-6)
+
+
+def test_load_factors_rejects_non_factor_checkpoint(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"weights": jnp.ones((3, 2))})
+    with pytest.raises(ValueError, match="not a factor checkpoint"):
+        load_factors(str(tmp_path))
+
+
+def test_serving_model_validation():
+    with pytest.raises(ValueError, match="rank"):
+        ServingModel([jnp.ones((3, 2)), jnp.ones((4, 5))])
+    with pytest.raises(ValueError, match="link"):
+        ServingModel([jnp.ones((3, 2))], link="probit")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: fit -> checkpoint dump -> fresh-process serve --verify
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cli_fit_dump_serve_verify(tmp_path):
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    cwd = os.path.dirname(os.path.dirname(__file__))
+    ckdir = str(tmp_path / "ck")
+    fit = subprocess.run(
+        [sys.executable, "-m", "repro.launch.complete", "--dataset",
+         "function", "--dims", "24,20,16", "--nnz", "3000", "--rank", "4",
+         "--sweeps", "2", "--algorithm", "als", "--dump-factors", ckdir],
+        env=env, cwd=cwd, capture_output=True, text=True, timeout=900)
+    assert fit.returncode == 0, fit.stdout + "\n---\n" + fit.stderr
+    report = str(tmp_path / "report.json")
+    srv = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_complete", "--factors",
+         ckdir, "--num-queries", "1000", "--batch-size", "128", "--topk",
+         "5", "--foldin-users", "4", "--verify", "--json", report],
+        env=env, cwd=cwd, capture_output=True, text=True, timeout=900)
+    assert srv.returncode == 0, srv.stdout + "\n---\n" + srv.stderr
+    assert "verify OK" in srv.stdout
+    with open(report) as f:
+        rep = json.load(f)
+    assert rep["rank"] == 4 and rep["score"]["qps"] > 0
+    assert {"p50_us", "p99_us"} <= set(rep["score"])

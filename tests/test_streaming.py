@@ -132,6 +132,43 @@ def test_heldout_metrics_perfect_model():
     assert m_log["rmse"] < 1e-5
 
 
+def test_heldout_metrics_log_clamp_region():
+    """Model values beyond ±30 are clamped BEFORE exp: a huge positive
+    log-rate yields exp(30), not inf, and huge negatives stay finite."""
+    from repro.core.sparse_tensor import SparseTensor
+    rng = np.random.default_rng(3)
+    idx = np.stack([rng.integers(0, s, size=32) for s in SHAPE],
+                   axis=1).astype(np.int32)
+    st = SparseTensor.from_coo(idx, np.ones(32, np.float32), SHAPE)
+    for sign in (+1.0, -1.0):
+        # rank-1 all-constant factors: model value = sign * 100 everywhere
+        fs = [jnp.full((d, 1), c) for d, c in
+              zip(SHAPE, (sign * 100.0, 1.0, 1.0))]
+        m = streaming.heldout_metrics(st, fs, link="log")
+        assert np.isfinite(m["rmse"]) and np.isfinite(m["poisson_deviance"])
+        pred = np.exp(sign * 30.0)       # the clamp boundary value
+        np.testing.assert_allclose(m["rmse"], abs(pred - 1.0), rtol=1e-4)
+    # inside the clamp region the link is exactly exp(model)
+    fs = [jnp.full((d, 1), c) for d, c in zip(SHAPE, (2.0, 1.0, 1.0))]
+    m = streaming.heldout_metrics(st, fs, link="log")
+    np.testing.assert_allclose(m["rmse"], np.exp(2.0) - 1.0, rtol=1e-4)
+
+
+def test_heldout_metrics_all_masked():
+    """A fully-padded (zero valid entries) tensor must not divide by zero
+    or poison the metrics with padding rows."""
+    from repro.core.sparse_tensor import SparseTensor
+    st = SparseTensor.from_coo(np.zeros((0, 3), np.int32),
+                               np.zeros((0,), np.float32), SHAPE, cap=16)
+    assert int(np.sum(np.asarray(st.mask))) == 0
+    fs = [jnp.ones((d, 2)) for d in SHAPE]
+    m = streaming.heldout_metrics(st, fs)
+    assert m["count"] == 0 or m["count"] == 1   # n clamped to >= 1
+    assert m["rmse"] == 0.0
+    assert m["poisson_deviance"] == 0.0
+    assert np.isfinite(m["rmse"])
+
+
 # ---------------------------------------------------------------------------
 # triplet file reader
 # ---------------------------------------------------------------------------
