@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.core.sparse_tensor import SparseTensor
+from repro.kernels import vmem as kvmem
 from repro.planner import tuner
 
 SHAPE, NNZ, RANK = (80, 60, 20), 15_000, 6   # netflix-ci study shape
@@ -28,6 +29,15 @@ def run(quick: bool = False):
         # quick mode still includes the default (index 0) so the
         # default-vs-tuned pair stays comparable
         cands = lattice[:2] if quick else lattice
+        # the same VMEM pre-check the tuner applies: an over-budget
+        # candidate is never timed, and the pruned count rides the record
+        src = omega if family == "cg_matvec" else st
+        cands, pruned = kvmem.prune_lattice(
+            family, cands,
+            lambda t: kvmem.workload_geometry(family, src, factors, t, x=x))
+        if pruned:
+            print(f"sec5_kernel_tiles_{family}: vmem_pruned="
+                  f"{[t.short() for t, _ in pruned]}")
         default_us, best_us, best_tile = None, float("inf"), None
         for tile in cands:
             fn = tuner._family_runner(family, tile, st, omega, factors, x)
@@ -37,6 +47,6 @@ def run(quick: bool = False):
             if us < best_us:
                 best_us, best_tile = us, tile
         emit(f"sec5_kernel_tiles_{family}_default", default_us,
-             f"tile={lattice[0].short()}")
+             f"tile={lattice[0].short()} vmem_pruned={len(pruned)}")
         emit(f"sec5_kernel_tiles_{family}_tuned", best_us,
-             f"tile={best_tile.short()}")
+             f"tile={best_tile.short()} vmem_pruned={len(pruned)}")

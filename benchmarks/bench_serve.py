@@ -49,13 +49,11 @@ def _score_sweep(engine: ServeEngine, shape, batch_sizes, num_queries: int,
         if num_queries % bs:                       # ...and the tail's bucket
             engine.score(queries[:num_queries % bs])
         lat = []
-        # repro-lint: disable=JS003 -- engine.score fences internally (obs span fence) and returns host arrays
         t_all = time.perf_counter()
         for lo in range(0, num_queries, bs):
             t0 = time.perf_counter()
             engine.score(queries[lo:lo + bs])
             lat.append(time.perf_counter() - t0)
-        # repro-lint: disable=JS003 -- engine.score fences internally (obs span fence) and returns host arrays
         wall = time.perf_counter() - t_all
         stats = percentiles(lat)
         qps = num_queries / wall

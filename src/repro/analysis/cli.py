@@ -57,6 +57,9 @@ def main(argv=None) -> int:
                     help="extra importable module exposing PYTREE_EXEMPLARS")
     ap.add_argument("--show-suppressed", action="store_true",
                     help="also print suppressed lint findings")
+    ap.add_argument("--strict-suppressions", action="store_true",
+                    help="advisory findings (JS006 stale suppressions) "
+                         "become errors (CI configuration)")
     args = ap.parse_args(argv)
 
     if args.all:
@@ -69,15 +72,29 @@ def main(argv=None) -> int:
 
     def report(pass_name: str, findings: List) -> None:
         nonlocal failures
-        blocking = [f for f in findings if not f.suppressed]
-        suppressed = [f for f in findings if f.suppressed]
+        blocking, advisory, suppressed = [], [], []
+        for f in findings:
+            if f.suppressed:
+                suppressed.append(f)
+            elif (getattr(f, "advisory", False)
+                  and not args.strict_suppressions):
+                advisory.append(f)
+            else:
+                blocking.append(f)
         for f in blocking:
             print(f.format())
+        for f in advisory:
+            print("warning: " + f.format())
         if args.show_suppressed:
             for f in suppressed:
                 print(f.format())
         failures += len(blocking)
-        note = f", {len(suppressed)} suppressed" if suppressed else ""
+        notes = []
+        if advisory:
+            notes.append(f"{len(advisory)} advisory")
+        if suppressed:
+            notes.append(f"{len(suppressed)} suppressed")
+        note = (", " + ", ".join(notes)) if notes else ""
         print(f"[{pass_name}] {len(blocking)} finding(s){note}")
 
     if args.lint:

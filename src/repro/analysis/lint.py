@@ -28,6 +28,9 @@ Rules (applicability depends on the file's scope, see ``scope_rules``):
   (where every generator is SeedSequence-derived by construction).
 * ``JS000`` bad-suppression   — a suppression comment with no reason string
   or an unknown rule id. Never suppressible.
+* ``JS006`` stale-suppression — a reasoned suppression whose rule no longer
+  fires on the covered line(s). Advisory in the CLI, an error under
+  ``--strict-suppressions`` (CI) — so disables can't outlive their reason.
 
 Suppression syntax (requires a reason after ``--``)::
 
@@ -39,9 +42,11 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import io
 import os
 import re
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+import tokenize
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 RULES: Dict[str, str] = {
     "JS000": "bad-suppression",
@@ -50,6 +55,7 @@ RULES: Dict[str, str] = {
     "JS003": "unfenced-timing",
     "JS004": "host-io-in-loop",
     "JS005": "nondeterminism",
+    "JS006": "stale-suppression",
     # non-lint passes report through the same Finding record; these rule ids
     # are NOT inline-suppressible (they describe structural contracts)
     "CT001": "path-aval-disagreement",
@@ -58,7 +64,25 @@ RULES: Dict[str, str] = {
     "PT001": "pytree-roundtrip",
     "PT002": "static-arg-aliasing",
     "DC001": "dead-code",
+    # SPMD collective-soundness analyzer (repro.analysis.spmd, §15): the
+    # sharding-propagation certifier (SP0xx), the collective-matching AST
+    # lint (SP1xx), and the VMEM resource certifier (SP2xx)
+    "SP000": "spmd-analysis-error",
+    "SP001": "partial-sum-escape",
+    "SP002": "redundant-psum",
+    "SP003": "wrong-replication-state",
+    "SP004": "sharded-dim-gather",
+    "SP101": "collective-divergence",
+    "SP102": "collective-under-traced-conditional",
+    "SP103": "hardcoded-axis-name",
+    "SP201": "vmem-over-budget",
 }
+
+# rules an inline disable comment may name: the per-line style/source
+# rules. Structural contracts (CT/PT/DC, SP0xx, SP2xx) are properties of
+# the program, not of a source line — never suppressible.
+SUPPRESSIBLE: Set[str] = {"JS001", "JS002", "JS003", "JS004", "JS005",
+                          "SP101", "SP102", "SP103"}
 
 # jit-reachable library layers: everything here may run under a jax trace
 _JIT_PREFIXES = ("core/", "kernels/", "planner/", "sparse/")
@@ -97,6 +121,9 @@ class Finding:
     message: str
     suppressed: bool = False
     reason: str = ""
+    # advisory findings (JS006) warn in the CLI and only block under
+    # --strict-suppressions (the CI configuration)
+    advisory: bool = False
 
     def format(self) -> str:
         tag = f" [suppressed: {self.reason}]" if self.suppressed else ""
@@ -315,11 +342,41 @@ class _Visitor(ast.NodeVisitor):
 # suppression handling
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """One well-formed reasoned suppression comment (for stale tracking)."""
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+    covered: Tuple[int, ...]
+
+
+def _iter_comments(source: str) -> Iterator[Tuple[int, int, str]]:
+    """(line, col, text) of every real COMMENT token. Tokenizing (rather
+    than line-scanning) keeps suppression examples inside docstrings inert
+    — they are STRING tokens, not comments."""
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        # unparsable tail: fall back to the plain line scan
+        for i, text in enumerate(source.splitlines(), start=1):
+            pos = text.find("#")
+            if pos >= 0:
+                yield i, pos, text[pos:]
+        return
+    for tok in tokens:
+        if tok.type == tokenize.COMMENT:
+            yield tok.start[0], tok.start[1], tok.string
+
+
 def _parse_suppressions(source: str, path: str):
-    """{line: (rules, reason)} plus JS000 findings for malformed ones."""
+    """({line: (rules, reason)}, JS000 findings for malformed comments,
+    [Suppression] records of the well-formed ones for stale detection)."""
     supp: Dict[int, Tuple[Set[str], str]] = {}
     bad: List[Finding] = []
-    for i, text in enumerate(source.splitlines(), start=1):
+    records: List[Suppression] = []
+    lines = source.splitlines()
+    for i, col, text in _iter_comments(source):
         m = _SUPPRESS_RE.search(text)
         if not m:
             if _HINT_RE.search(text):
@@ -330,9 +387,7 @@ def _parse_suppressions(source: str, path: str):
             continue
         rules = {r.strip().upper() for r in m.group(1).split(",") if r.strip()}
         reason = (m.group(2) or "").strip()
-        unknown = sorted(r for r in rules
-                         if r not in RULES or r == "JS000"
-                         or not r.startswith("JS"))
+        unknown = sorted(r for r in rules if r not in SUPPRESSIBLE)
         if unknown:
             bad.append(Finding(path, i, 0, "JS000",
                                f"suppression names unknown/unsuppressible "
@@ -344,14 +399,17 @@ def _parse_suppressions(source: str, path: str):
                                "disable must say why (`-- <reason>`)"))
             continue  # a reasonless suppression does not suppress
         if rules:
-            lines = [i]
+            covered = [i]
             # a comment-only line covers the following statement line too
-            if text.lstrip().startswith("#"):
-                lines.append(i + 1)
-            for ln in lines:
+            before = lines[i - 1][:col] if i - 1 < len(lines) else ""
+            if not before.strip():
+                covered.append(i + 1)
+            records.append(Suppression(i, tuple(sorted(rules)), reason,
+                                       tuple(covered)))
+            for ln in covered:
                 prev = supp.get(ln, (set(), ""))
                 supp[ln] = (prev[0] | rules, reason or prev[1])
-    return supp, bad
+    return supp, bad, records
 
 
 def lint_source(source: str, path: str,
@@ -366,7 +424,7 @@ def lint_source(source: str, path: str,
                         f"file does not parse: {e.msg}")]
     visitor = _Visitor(path, rules)
     visitor.visit(tree)
-    supp, findings = _parse_suppressions(source, path)
+    supp, findings, records = _parse_suppressions(source, path)
     for f in visitor.raw:
         s = supp.get(f.line)
         if s and f.rule in s[0]:
@@ -374,6 +432,22 @@ def lint_source(source: str, path: str,
                                                 reason=s[1]))
         else:
             findings.append(f)
+    # JS006: a reasoned suppression whose rule never fired on any covered
+    # line is stale — the code was fixed (or moved) and the disable rotted.
+    # Only JS rules in this file's active scope are judged here; SP1xx
+    # suppressions are the spmd collectives pass's to verify.
+    fired = {(f.line, f.rule) for f in visitor.raw}
+    for rec in records:
+        for r in rec.rules:
+            if not r.startswith("JS") or r not in rules:
+                continue
+            if not any((ln, r) in fired for ln in rec.covered):
+                findings.append(Finding(
+                    path, rec.line, 0, "JS006",
+                    f"stale suppression: {r} no longer fires on "
+                    f"line(s) {list(rec.covered)} — remove the disable "
+                    f"comment (reason was: {rec.reason!r})",
+                    advisory=True))
     return sorted(findings, key=lambda f: (f.line, f.col, f.rule))
 
 

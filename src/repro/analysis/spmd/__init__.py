@@ -1,0 +1,17 @@
+"""SPMD collective-soundness analyzer (DESIGN.md §15).
+
+Three coordinated static passes over the distributed execution stack:
+
+* :mod:`repro.analysis.spmd.sharding` — replication-state propagation over
+  the planner IR (abstract interpretation of the traced jaxprs; exposed
+  online as ``plan_contraction(..., validate_spmd=True)``);
+* :mod:`repro.analysis.spmd.collectives` — AST collective-matching lint of
+  the shard_map-executing layers (deadlock shapes, axis-name hygiene);
+* :mod:`repro.analysis.spmd.vmem` — static VMEM certification of the tuner
+  tile lattices (the model also backs the tuner's online pruning).
+
+CLI: ``python -m repro.analysis.spmd`` / ``repro-spmd``.
+"""
+from repro.analysis.spmd.cli import main
+
+__all__ = ["main"]

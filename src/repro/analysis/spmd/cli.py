@@ -1,0 +1,169 @@
+"""``python -m repro.analysis.spmd`` / ``repro-spmd`` — the SPMD
+collective-soundness CLI (DESIGN.md §15).
+
+Runs any combination of the three passes and exits nonzero when any
+unsuppressed finding survives:
+
+* ``--sharding``     replay every candidate path of all seven planner
+  families (orders 3–5, local + distributed) through the replication-state
+  interpreter; partial-sum escapes / redundant psums / wrong-axis psums /
+  sharded-dim gathers are findings (SP001–SP004)
+* ``--collectives``  AST collective-matching lint over the shard_map-
+  executing layers: branch-divergent sequences, collectives under traced
+  conditionals, hardcoded axis names (SP101–SP103, suppressible with a
+  reason; stale SP suppressions surface as JS006)
+* ``--vmem``         certify every tuner lattice candidate against the
+  device VMEM budget (SP201); ``--paper-scale`` opts into the paper-extent
+  geometries whose expected over-budget findings scope the DMA-streaming
+  follow-up
+* ``--all``          everything above (the blocking CI configuration)
+
+``--fault missing-psum|double-psum`` plants a collective bug in the sharding
+sweep (CI tripwire: the run must then fail). ``--fixture PATH --expect
+RULE`` analyzes one seeded-bug fixture and exits 0 iff exactly that rule is
+reported — the detectors' proof-they-fire harness.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import sys
+from typing import List
+
+from repro.analysis.cli import _repo_root
+
+
+def _load_fixture(path: str):
+    spec = importlib.util.spec_from_file_location(
+        "spmd_fixture_" + os.path.splitext(os.path.basename(path))[0], path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def check_fixture(path: str) -> List:
+    """Analyze one fixture with the detector its declarations select:
+    ``run``+``IN_STATES`` → sharding; ``FAMILY``+``TILE`` → vmem; anything
+    else → the collectives AST lint on the file itself."""
+    from repro.analysis.spmd import collectives as ccheck
+    from repro.analysis.spmd import sharding, vmem
+
+    if path.endswith(".py"):
+        mod = _load_fixture(path)
+        if hasattr(mod, "run") and hasattr(mod, "IN_STATES"):
+            return sharding.analyze_fn(
+                mod.run, mod.ARGS, mod.IN_STATES, mod.AXIS_ENV,
+                expected=getattr(mod, "EXPECTED", None),
+                label=os.path.basename(path))
+        if hasattr(mod, "FAMILY") and hasattr(mod, "TILE"):
+            return vmem.check_fixture(mod)
+    return [f for f in ccheck.lint_file(path) if not f.suppressed]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-spmd",
+        description="SPMD collective-soundness analyzer: sharding "
+                    "propagation, collective matching, VMEM certification")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (CI configuration)")
+    ap.add_argument("--sharding", action="store_true")
+    ap.add_argument("--collectives", action="store_true")
+    ap.add_argument("--vmem", action="store_true")
+    ap.add_argument("--root", default=".",
+                    help="repo root (default: auto-detect from cwd)")
+    ap.add_argument("--orders", default="3,4,5",
+                    help="tensor orders for the sharding sweep")
+    ap.add_argument("--fault", default=None,
+                    choices=["missing-psum", "double-psum"],
+                    help="plant a collective bug in the sharding sweep "
+                         "(self-test: the sweep must then fail)")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="VMEM budget override in MiB for --vmem")
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="certify --vmem against paper-extent geometries "
+                         "(over-budget findings expected; non-CI)")
+    ap.add_argument("--fixture", default=None, metavar="PATH",
+                    help="analyze one seeded-bug fixture file")
+    ap.add_argument("--expect", default=None, metavar="RULE",
+                    help="with --fixture: exit 0 iff exactly this rule "
+                         "is reported")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print suppressed findings")
+    ap.add_argument("--strict-suppressions", action="store_true",
+                    help="advisory findings (stale suppressions) become "
+                         "errors (CI configuration)")
+    args = ap.parse_args(argv)
+
+    if args.fixture is not None:
+        findings = check_fixture(args.fixture)
+        for f in findings:
+            print(f.format())
+        rules = {f.rule for f in findings}
+        if args.expect is not None:
+            ok = rules == {args.expect}
+            print(f"[fixture] {args.fixture}: reported {sorted(rules)}, "
+                  f"expected exactly {{{args.expect!r}}}: "
+                  f"{'OK' if ok else 'FAILED'}")
+            return 0 if ok else 1
+        return 0 if not findings else 1
+
+    if args.all:
+        args.sharding = args.collectives = args.vmem = True
+    if not (args.sharding or args.collectives or args.vmem):
+        ap.error("nothing to do: pass --all or at least one pass flag")
+
+    root = _repo_root(args.root)
+    failures = 0
+
+    def report(pass_name: str, findings: List) -> None:
+        nonlocal failures
+        blocking, advisory, suppressed = [], [], []
+        for f in findings:
+            if f.suppressed:
+                suppressed.append(f)
+            elif f.advisory and not args.strict_suppressions:
+                advisory.append(f)
+            else:
+                blocking.append(f)
+        for f in blocking:
+            print(f.format())
+        for f in advisory:
+            print("warning: " + f.format())
+        if args.show_suppressed:
+            for f in suppressed:
+                print(f.format())
+        failures += len(blocking)
+        notes = []
+        if advisory:
+            notes.append(f"{len(advisory)} advisory")
+        if suppressed:
+            notes.append(f"{len(suppressed)} suppressed")
+        note = (", " + ", ".join(notes)) if notes else ""
+        print(f"[{pass_name}] {len(blocking)} finding(s){note}")
+
+    if args.sharding:
+        from repro.analysis.spmd import sharding
+        orders = tuple(int(o) for o in args.orders.split(","))
+        sharding.set_fault(args.fault)
+        try:
+            report("sharding", sharding.run(orders))
+        finally:
+            sharding.set_fault(None)
+
+    if args.collectives:
+        from repro.analysis.spmd import collectives
+        report("collectives", collectives.run(root))
+
+    if args.vmem:
+        from repro.analysis.spmd import vmem
+        report("vmem", vmem.run(budget_mb=args.budget_mb,
+                                paper_scale=args.paper_scale))
+
+    print("OK" if failures == 0 else f"FAILED: {failures} finding(s)")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

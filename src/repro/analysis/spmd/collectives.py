@@ -1,0 +1,216 @@
+"""SPMD pass 2 — collective-matching lint (DESIGN.md §15.2).
+
+Collectives are rendezvous points: every device in a `shard_map` body must
+execute the SAME sequence of them, in the same order, over the same axis
+names — or the program deadlocks across processes (on 8 host devices the
+same bug is merely a wrong number). This AST pass walks the layers that
+execute inside `shard_map` (``core/``, ``planner/``, ``runtime/``) and
+extracts the collective sequence on each control-flow path:
+
+* ``SP101`` collective-divergence — a Python ``if`` whose test is
+  device-varying (contains a traced ``jnp``/``jax.lax`` call, or consults
+  ``axis_index``/``process_index``) and whose branches execute *different*
+  collective sequences: the classic SPMD deadlock (one branch psums, the
+  other doesn't). Uniform tests (``ctx.data is not None``, path-string
+  dispatch) are configuration, not data — they branch identically on every
+  device and are never flagged.
+* ``SP102`` collective-under-traced-conditional — a collective inside a
+  ``lax.cond``/``lax.switch`` branch: whether it executes depends on a
+  traced predicate, which devices may disagree on. (The jaxpr-level twin of
+  this check, including ``while_loop`` predicates, lives in
+  ``sharding.py``.)
+* ``SP103`` hardcoded-axis-name — a ``jax.lax`` collective whose axis
+  argument is a string literal instead of a name threaded from the
+  enclosing mesh contract (``AxisCtx`` / ``DistInfo``): the literal works
+  on exactly one mesh spelling and silently mismatches any other.
+
+Inline suppressions follow ``lint.py`` discipline (SP101–SP103 are
+suppressible with a reason); a suppression naming an SP rule that no
+longer fires is reported stale (``JS006``) by this pass.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import dataclasses
+
+from repro.analysis.lint import (Finding, _contains_traced_call, _dotted,
+                                 _parse_suppressions)
+
+# jax.lax rendezvous collectives (and the axis-dependent axis_index)
+COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather", "psum_scatter",
+               "all_to_all", "ppermute", "pshuffle", "pswapaxes"}
+# repo helpers that wrap collectives (core/distributed.py): calling one IS
+# executing a collective on that control-flow path
+CTX_HELPERS = {"psum_data", "psum_model", "sparse_allreduce_butterfly",
+               "multilinear_rowsharded", "all_gather_factor"}
+# positional index of the axis-name argument per collective
+_AXIS_ARG = {"psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "all_gather": 1,
+             "psum_scatter": 1, "all_to_all": 1, "ppermute": 1,
+             "pshuffle": 1, "axis_index": 0}
+
+# the layers that execute inside shard_map bodies (repo-root-relative)
+DEFAULT_ROOTS = ("src/repro/core", "src/repro/planner", "src/repro/runtime")
+
+
+def _collective_name(call: ast.Call) -> Optional[str]:
+    """The collective this call executes, or None."""
+    d = _dotted(call.func)
+    if d is None:
+        return None
+    if d[-1] in COLLECTIVES and (
+            d[0] == "lax" or (len(d) >= 2 and d[0] == "jax"
+                              and d[-2] == "lax")):
+        return d[-1]
+    if d[-1] in CTX_HELPERS:
+        return d[-1]
+    return None
+
+
+def _is_lax_rooted(d: Tuple[str, ...]) -> bool:
+    return d[0] == "lax" or (len(d) >= 2 and d[0] == "jax" and d[-2] == "lax")
+
+
+def _device_varying_test(test: ast.AST) -> bool:
+    """Does this `if` test depend on per-device data? Traced jnp/lax calls
+    are device-varying; so is anything consulting the device/process
+    identity. Plain attribute/None/string tests are uniform configuration."""
+    if _contains_traced_call(test):
+        return True
+    for n in ast.walk(test):
+        if isinstance(n, ast.Call):
+            d = _dotted(n.func)
+            if d is not None and d[-1] in ("axis_index", "process_index",
+                                           "model_index"):
+                return True
+    return False
+
+
+def _collective_sequence(stmts: Sequence[ast.stmt]) -> Tuple[str, ...]:
+    """Ordered collective names executed by a statement list, recursing
+    through uniform structure (loops, with, nested uniform ifs join as
+    the union-in-order of their own flagged-or-not bodies)."""
+    seq: List[str] = []
+    for stmt in stmts:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                name = _collective_name(node)
+                if name is not None:
+                    seq.append(name)
+    return tuple(seq)
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.raw: List[Finding] = []
+
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.raw.append(Finding(self.path, node.lineno, node.col_offset,
+                                rule, msg))
+
+    def visit_If(self, node: ast.If) -> None:
+        if _device_varying_test(node.test):
+            body = _collective_sequence(node.body)
+            orelse = _collective_sequence(node.orelse)
+            if body != orelse:
+                self._emit(
+                    "SP101", node,
+                    f"collective sequences diverge across a device-varying "
+                    f"branch: if-branch {list(body)} vs else-branch "
+                    f"{list(orelse)} — devices taking different branches "
+                    f"rendezvous on different collectives and deadlock")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        d = _dotted(node.func)
+        if d is not None and _is_lax_rooted(d):
+            # SP102: collectives under a traced conditional
+            if d[-1] in ("cond", "switch"):
+                if any(isinstance(n, ast.Call)
+                       and _collective_name(n) is not None
+                       for a in node.args[1:] for n in ast.walk(a)):
+                    self._emit(
+                        "SP102", node,
+                        f"collective inside a lax.{d[-1]} branch — whether "
+                        f"it executes depends on a traced predicate, which "
+                        f"devices may disagree on; hoist the collective out "
+                        f"of the conditional (compute both, select after)")
+            # SP103: string-literal axis names
+            if d[-1] in _AXIS_ARG:
+                axis = None
+                pos = _AXIS_ARG[d[-1]]
+                if len(node.args) > pos:
+                    axis = node.args[pos]
+                for kw in node.keywords:
+                    if kw.arg == "axis_name":
+                        axis = kw.value
+                if (isinstance(axis, ast.Constant)
+                        and isinstance(axis.value, str)):
+                    self._emit(
+                        "SP103", node,
+                        f"lax.{d[-1]} over hardcoded axis name "
+                        f"{axis.value!r} — axis names must come from the "
+                        f"enclosing mesh contract (AxisCtx/DistInfo), not "
+                        f"string literals that bind to one mesh spelling")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, path: str) -> List[Finding]:
+    """Collective-matching lint of one file, with lint.py suppression and
+    SP-stale (JS006) discipline applied."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, e.offset or 0, "SP000",
+                        f"file does not parse: {e.msg}")]
+    visitor = _Visitor(path)
+    visitor.visit(tree)
+    supp, _bad, records = _parse_suppressions(source, path)
+    findings: List[Finding] = []
+    for f in visitor.raw:
+        s = supp.get(f.line)
+        if s and f.rule in s[0]:
+            findings.append(dataclasses.replace(f, suppressed=True,
+                                                reason=s[1]))
+        else:
+            findings.append(f)
+    fired = {(f.line, f.rule) for f in visitor.raw}
+    for rec in records:
+        for r in rec.rules:
+            if not r.startswith("SP"):
+                continue  # JS staleness is lint.py's to judge
+            if not any((ln, r) in fired for ln in rec.covered):
+                findings.append(Finding(
+                    path, rec.line, 0, "JS006",
+                    f"stale suppression: {r} no longer fires on "
+                    f"line(s) {list(rec.covered)} — remove the disable "
+                    f"comment (reason was: {rec.reason!r})",
+                    advisory=True))
+    return sorted(findings, key=lambda f: (f.line, f.col, f.rule))
+
+
+def lint_file(path: str) -> List[Finding]:
+    with open(path, "r") as fh:
+        return lint_source(fh.read(), path)
+
+
+def run(root: str, roots: Sequence[str] = DEFAULT_ROOTS) -> List[Finding]:
+    """Lint every shard_map-executing layer under the repo root."""
+    findings: List[Finding] = []
+    for rel in roots:
+        top = os.path.join(root, rel)
+        if os.path.isfile(top):
+            findings.extend(lint_file(top))
+            continue
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    findings.extend(lint_file(os.path.join(dirpath, fn)))
+    return findings

@@ -1,0 +1,99 @@
+"""SPMD pass 3 — static VMEM certification of the tile lattices
+(DESIGN.md §15.3).
+
+Prices every tile candidate in ``planner.tuner.LATTICES`` against the
+device VMEM budget using the :mod:`repro.kernels.vmem` footprint model and
+reports ``SP201`` for any candidate that cannot fit. The same model backs
+the tuner's online pruning (a rejected tile is never timed and never cached
+as a winner); this pass is the offline sweep that certifies the *shipped
+lattice* against representative geometries before any tuner runs.
+
+Two geometry tiers:
+
+* the default (CI) tier — the benchmark workload plus a large single-host
+  study shape; the blocking CI job requires ZERO findings here, so every
+  committed lattice candidate is provably runnable on a 16 MiB core.
+* ``--paper-scale`` — netflix-full / paper-function mode extents, where the
+  full-height resident factors of ``tttp``/``cg_matvec`` legitimately
+  exceed VMEM. These findings are *expected* (opt-in, non-blocking): they
+  quantify exactly which modes need the ROADMAP's DMA-streamed
+  HBM-resident-factor follow-up before paper-scale Pallas runs.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.analysis.lint import Finding
+from repro.kernels.vmem import (KernelGeometry, estimate_vmem,
+                                vmem_budget_bytes)
+
+# (name, geometry per family) — capacities chosen as the observed CCSR
+# bucket caps for those shapes at the default block_rows
+_CI_SHAPES: Tuple[Tuple[str, Tuple[int, ...], int, int], ...] = (
+    # (tier label, dims, rank, tttp capacity)
+    ("bench", (80, 60, 20), 8, 15_360),
+    ("study", (4096, 2048, 1024), 32, 1 << 20),
+)
+_PAPER_SHAPES: Tuple[Tuple[str, Tuple[int, ...], int, int], ...] = (
+    ("netflix-full", (480_189, 17_770, 2_182), 32, 1 << 20),
+    ("paper-function", (5_000, 5_000, 5_000, 5_000), 25, 1 << 20),
+)
+
+
+def _geometries(family: str, shapes, block_rows: int
+                ) -> List[Tuple[str, KernelGeometry]]:
+    out: List[Tuple[str, KernelGeometry]] = []
+    for label, dims, rank, cap in shapes:
+        if family == "tttp":
+            geom = KernelGeometry(nd=len(dims), rank=rank,
+                                  factor_rows=tuple(dims), capacity=cap,
+                                  block_rows=block_rows)
+        else:
+            # bucketed kernels stream mode-0 buckets; resident factors are
+            # the non-target modes. Bucket capacity scales with occupancy:
+            # assume a dense-ish block (capacity = cap / dims[0] rows per
+            # bucket, floored at one vector)
+            bucket_cap = max(8, (cap // max(dims[0], 1)) * block_rows)
+            geom = KernelGeometry(
+                nd=len(dims), rank=rank, factor_rows=tuple(dims[1:]),
+                capacity=bucket_cap, block_rows=block_rows,
+                x_rows=dims[0] if family == "cg_matvec" else None)
+        out.append((label, geom))
+    return out
+
+
+def run(budget_mb: Optional[float] = None, paper_scale: bool = False
+        ) -> List[Finding]:
+    """Certify every lattice candidate of every family. Returns SP201
+    findings for candidates that exceed the budget."""
+    from repro.planner import tuner
+
+    budget = (int(budget_mb * 2 ** 20) if budget_mb is not None
+              else vmem_budget_bytes())
+    shapes = _PAPER_SHAPES if paper_scale else _CI_SHAPES
+    findings: List[Finding] = []
+    for family, lattice in sorted(tuner.LATTICES.items()):
+        for tile in lattice:
+            for label, geom in _geometries(family, shapes, tile.block_rows):
+                est = estimate_vmem(family, tile, geom, budget=budget)
+                if not est.fits:
+                    findings.append(Finding(
+                        "vmem", 0, 0, "SP201",
+                        f"[{label}] lattice candidate cannot fit VMEM: "
+                        f"{est.format()}"))
+    return findings
+
+
+def check_fixture(mod) -> List[Finding]:
+    """Fixture entry: a module declaring FAMILY, TILE (KernelTile kwargs)
+    and GEOMETRY (KernelGeometry kwargs), optionally BUDGET_MB."""
+    from repro.kernels.tile import KernelTile
+
+    tile = KernelTile(**mod.TILE)
+    geom = KernelGeometry(**mod.GEOMETRY)
+    budget = int(getattr(mod, "BUDGET_MB", 16) * 2 ** 20)
+    est = estimate_vmem(mod.FAMILY, tile, geom, budget=budget)
+    if est.fits:
+        return []
+    return [Finding("vmem", 0, 0, "SP201",
+                    f"[fixture] {est.format()}")]

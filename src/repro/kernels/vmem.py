@@ -1,0 +1,196 @@
+"""Static VMEM footprint model for the tiled Pallas kernel tier.
+
+Every kernel in this package declares its VMEM residency through BlockSpecs
+(DESIGN.md §13, §15): grid-streamed value/index/key/output windows plus
+VMEM-resident factor column slices, with Θ(block_m · block_r) ``fori_loop``
+transients on top. This module prices that residency *statically* — from a
+:class:`KernelTile` and the workload geometry alone, no tracing — so a tile
+candidate that cannot fit the ~16 MiB/core TPU VMEM budget is rejected
+BEFORE ``planner.tuner`` spends a timing on it (and before a real TPU run
+dies in the Mosaic allocator).
+
+The model mirrors the BlockSpec geometry of ``tttp.py`` / ``mttkrp.py`` /
+``cg_matvec.py`` exactly (same block_m/block_r clamping and padding as
+``ops.py``), charges grid-streamed windows twice (the Pallas pipeline
+double-buffers them), charges resident factor windows once, and adds the
+scatter-schedule extras (the one-hot indicator or the segmented cumsum).
+It is deliberately a slight over-estimate: pruning a tile that would
+barely fit is cheap; timing a tile that then OOMs on hardware is not.
+
+Consumed by ``planner.tuner`` (lattice pruning, plan-cache key validity)
+and by ``repro.analysis.spmd`` (the SP201 certification pass).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.utils import round_up
+from repro.kernels.tile import KernelTile
+
+# TPU cores expose ~16 MiB of VMEM (see the Pallas TPU notes); compiled
+# kernels get a slice of it after the compiler's own reservations.
+DEFAULT_VMEM_BYTES = 16 * 2 ** 20
+
+
+def vmem_budget_bytes() -> int:
+    """The device VMEM budget the certifier prunes against.
+
+    ``REPRO_VMEM_MB`` overrides (useful for sizing against a partial
+    per-kernel allowance, or for forcing prunes in tests/CI tripwires)."""
+    mb = os.environ.get("REPRO_VMEM_MB")
+    if mb:
+        return int(float(mb) * 2 ** 20)
+    return DEFAULT_VMEM_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGeometry:
+    """Static workload geometry one kernel instance runs against.
+
+    ``factor_rows`` are the row extents of the VMEM-resident (non-target)
+    factors; ``capacity`` is the padded-COO cap (tttp) or the CCSR bucket
+    capacity (bucketed kernels); ``x_rows`` is the CG direction's row
+    extent (cg_matvec only)."""
+    nd: int
+    rank: int
+    factor_rows: Tuple[int, ...]
+    capacity: int
+    block_rows: int = 8
+    x_rows: Optional[int] = None
+    value_bytes: int = 4
+    index_bytes: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemEstimate:
+    family: str
+    tile_short: str
+    total: int
+    budget: int
+    breakdown: Tuple[Tuple[str, int], ...]
+    block_m: int
+    block_r: int
+    schedule: str
+
+    @property
+    def fits(self) -> bool:
+        return self.total <= self.budget
+
+    def format(self) -> str:
+        parts = " + ".join(f"{k}={v}" for k, v in self.breakdown)
+        verdict = "fits" if self.fits else "OVER"
+        return (f"{self.family}[{self.tile_short}]: {self.total} B "
+                f"({verdict} budget {self.budget} B): {parts}")
+
+
+def _sched_bytes(schedule: str, block_rows: int, block_m: int, block_r: int,
+                 vb: int, ab: int) -> int:
+    """Scatter-schedule extras of ``tile.scatter_rows``: the one-hot
+    indicator matmul operand vs the segmented cumsum buffer."""
+    if schedule == "onehot":
+        return block_rows * block_m * vb
+    return block_m * block_r * ab
+
+
+def estimate_vmem(family: str, tile: KernelTile,
+                  geom: KernelGeometry,
+                  budget: Optional[int] = None) -> VmemEstimate:
+    """Per-grid-step VMEM bytes for ``family`` under ``tile`` on ``geom``,
+    following each kernel's BlockSpecs (see module docstring)."""
+    budget = vmem_budget_bytes() if budget is None else int(budget)
+    vb, ib = geom.value_bytes, geom.index_bytes
+    ab = np.dtype(tile.accum_dtype).itemsize
+    g = tile.buckets_per_step
+    parts: List[Tuple[str, int]] = []
+
+    if family == "tttp":
+        # ops.py: bm = min(block_m, round_up(cap, 8)); step = bm·g;
+        # factors padded to round_up(R, block_r); block_r clamped to R-pad
+        bm = min(tile.block_m, round_up(geom.capacity, 8))
+        rp = round_up(geom.rank, tile.block_r)
+        br = min(tile.block_r, rp)
+        step = bm * g
+        schedule = "none"
+        parts.append(("values", 2 * step * vb))
+        parts.append(("indices", 2 * step * geom.nd * ib))
+        parts.append(("out", 2 * step * ab))
+        parts.append(("factors", 2 * sum(geom.factor_rows) * br * vb))
+        parts.append(("transients", 2 * bm * br * vb + bm * ab))
+    elif family in ("mttkrp", "cg_matvec"):
+        bm = min(tile.block_m, round_up(geom.capacity, 8))
+        cp = round_up(geom.capacity, bm)
+        if family == "mttkrp":
+            rp = round_up(geom.rank, tile.block_r)
+            br = min(tile.block_r, rp)
+        else:
+            br = geom.rank          # cg holds full R (block_r ignored)
+        schedule = tile.resolved_schedule(geom.block_rows, bm)
+        parts.append(("values", 2 * g * cp * vb))
+        parts.append(("indices", 2 * g * cp * geom.nd * ib))
+        parts.append(("key", 2 * g * cp * 4))
+        parts.append(("out", 2 * g * geom.block_rows * br * ab))
+        resident = sum(geom.factor_rows) * br * vb
+        if family == "cg_matvec":
+            resident += (geom.x_rows or 0) * geom.rank * vb
+        parts.append(("factors", resident))
+        trans = 2 * bm * br * vb + geom.block_rows * br * ab
+        if family == "cg_matvec":
+            trans += bm * br * ab + bm * ab   # contrib (block_m, R) + z
+        parts.append(("transients", trans))
+        parts.append(("schedule",
+                      _sched_bytes(schedule, geom.block_rows, bm, br,
+                                   vb, ab)))
+    else:
+        raise KeyError(f"unknown kernel family {family!r}")
+
+    return VmemEstimate(family=family, tile_short=tile.short(),
+                        total=sum(v for _, v in parts), budget=budget,
+                        breakdown=tuple(parts),
+                        block_m=bm, block_r=br, schedule=schedule)
+
+
+def workload_geometry(family: str, st, factors, tile: KernelTile,
+                      x=None) -> KernelGeometry:
+    """Geometry for one concrete tuner workload. For the bucketed families
+    the capacity is the CCSR bucket capacity this ``tile.block_rows``
+    implies (mode 0, matching ``tuner._family_runner``) — computed on host
+    from the concrete indices, same rounding as ``ccsr.bucket_pattern``."""
+    nd = len(st.shape)
+    rank = next(int(f.shape[1]) for f in factors if f is not None)
+    if family == "tttp":
+        rows = tuple(int(f.shape[0]) for f in factors if f is not None)
+        return KernelGeometry(nd=nd, rank=rank, factor_rows=rows,
+                              capacity=int(st.cap),
+                              block_rows=tile.block_rows,
+                              value_bytes=st.values.dtype.itemsize)
+    rows = tuple(int(f.shape[0]) for d, f in enumerate(factors)
+                 if d != 0 and f is not None)
+    idx = np.asarray(st.indices[:, 0])[np.asarray(st.valid)]
+    occ = np.bincount(idx // tile.block_rows) if idx.size else np.zeros(1)
+    cap = round_up(max(int(occ.max()) if occ.size else 1, 1), 8)
+    x_rows = int(x.shape[0]) if (family == "cg_matvec" and x is not None) \
+        else (int(st.shape[0]) if family == "cg_matvec" else None)
+    return KernelGeometry(nd=nd, rank=rank, factor_rows=rows, capacity=cap,
+                          block_rows=tile.block_rows, x_rows=x_rows,
+                          value_bytes=st.values.dtype.itemsize)
+
+
+def prune_lattice(family: str, lattice: Sequence[KernelTile],
+                  geom_fn: Callable[[KernelTile], KernelGeometry],
+                  budget: Optional[int] = None
+                  ) -> Tuple[List[KernelTile],
+                             List[Tuple[KernelTile, VmemEstimate]]]:
+    """Split a tile lattice into (fits, pruned-with-estimates) against the
+    VMEM budget. ``geom_fn`` maps each tile to its geometry (bucket
+    capacity depends on the tile's block_rows)."""
+    kept: List[KernelTile] = []
+    pruned: List[Tuple[KernelTile, VmemEstimate]] = []
+    for tile in lattice:
+        est = estimate_vmem(family, tile, geom_fn(tile), budget=budget)
+        (kept if est.fits else pruned).append(
+            tile if est.fits else (tile, est))
+    return kept, pruned

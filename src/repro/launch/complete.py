@@ -209,6 +209,7 @@ def main():
                                          cache_path=plan_cache)
             print(f"plan-cache: hits={summary['hits']} "
                   f"measured={summary['measured']} "
+                  f"vmem_pruned={summary['vmem_pruned']} "
                   f"winners={summary['winners']}")
 
     loss = LOSS.LOSSES[args.loss]

@@ -201,7 +201,6 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
         if l not in LOSS.LOSSES:
             raise ValueError(f"unknown loss {l!r}")
 
-    # repro-lint: disable=JS003 -- ingest is host-side streaming; device spans come from repro.obs
     t_ing = time.perf_counter()
     chunks = streaming.make_stream(spec.dataset, spec.seed, spec.shape,
                                    spec.nnz, spec.chunk_size,
@@ -210,7 +209,6 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
         chunks, spec.shape, num_shards=spec.num_shards,
         test_fraction=spec.test_fraction, spool_dir=spool_dir,
         bucket_modes=())
-    # repro-lint: disable=JS003 -- ingest is host-side streaming; device spans come from repro.obs
     ingest_seconds = time.perf_counter() - t_ing
     st, omega, test_st = ds.tensor, ds.omega, ds.test
     stats = ds.stats
@@ -233,6 +231,7 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
                                           cache_path=plan_cache)
         print(f"plan-cache: hits={tune_summary['hits']} "
               f"measured={tune_summary['measured']} "
+              f"vmem_pruned={tune_summary['vmem_pruned']} "
               f"winners={tune_summary['winners']}")
 
     report = {
@@ -257,6 +256,7 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
         report["plan_cache"] = {"path": plan_cache,
                                 "hits": tune_summary["hits"],
                                 "measured": tune_summary["measured"],
+                                "vmem_pruned": tune_summary["vmem_pruned"],
                                 "winners": tune_summary["winners"]}
 
     for loss_name in losses:
@@ -319,7 +319,6 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
             loop = RestartableLoop(ckpt_dir, loop_step, ckpt_every=5,
                                    metadata_fn=lambda step, _m=metrics:
                                    {"metrics": _m})
-            # repro-lint: disable=JS003 -- loop.run syncs per sweep via metric fetch + checkpoint serialization
             t0 = time.perf_counter()
             loop.run(state0, spec.sweeps)
             if not metrics:
@@ -329,7 +328,6 @@ def run_experiment(spec: ExperimentSpec, out_dir: str = "experiments",
             report["runs"].append({
                 "algorithm": algorithm, "loss": loss_name,
                 "update_loss": update_loss, "link": link, "rank": spec.rank,
-                # repro-lint: disable=JS003 -- loop.run syncs per sweep via metric fetch + checkpoint serialization
                 "total_seconds": time.perf_counter() - t0,
                 "sweeps": metrics,
                 "final": metrics[-1] if metrics else None,

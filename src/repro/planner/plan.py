@@ -127,7 +127,8 @@ def plan_contraction(expr: str, operands: Sequence,
                      ctx: AxisCtx = LOCAL,
                      rowsharded: bool = False,
                      config: Optional[PlannerConfig] = None,
-                     validate: bool = False) -> Plan:
+                     validate: bool = False,
+                     validate_spmd: bool = False) -> Plan:
     """Plan (or fetch the cached plan for) one einsum call.
 
     ``path`` forces a specific candidate (validated against the IR);
@@ -144,6 +145,14 @@ def plan_contraction(expr: str, operands: Sequence,
     memoized (DESIGN.md §12.2). Raises
     :class:`repro.analysis.contracts.PlanContractError` on disagreement;
     cache hits are already-certified and skip the check.
+
+    ``validate_spmd=True`` additionally certifies the *collective schedule*
+    of every candidate path (DESIGN.md §15.1): the sharding-propagation
+    interpreter replays each path over operand avals under this ctx's mesh
+    axes and raises :class:`repro.analysis.spmd.sharding.SpmdContractError`
+    on a partial-sum escape, redundant/wrong-axis psum, or a gather into a
+    sharded dimension. Aval-only, so it composes with tracing; a LOCAL ctx
+    has no mesh axes and passes trivially.
     """
     ctx = ctx if ctx is not None else LOCAL
     config = config if config is not None else default_config()
@@ -164,6 +173,10 @@ def plan_contraction(expr: str, operands: Sequence,
         # deferred import: analysis depends on the planner, never the reverse
         from repro.analysis.contracts import certify_candidates
         certify_candidates(ir, candidates, operands, ctx, config)
+    if validate_spmd:
+        # aval-only (works on tracers too): certify the collective schedule
+        from repro.analysis.spmd.sharding import certify_plan
+        certify_plan(ir, candidates, operands, ctx, config)
     if path is not None:
         # a forced path makes autotuning moot — the plan is final
         if path not in candidates:

@@ -146,6 +146,23 @@ def tune_family(family: str, st, factors, omega=None, x=None,
     candidate bumps the ``tuner/measurements`` counter and lands a
     PlanRecord row keyed ``autotune/<family>|<path>|tile:<short>``."""
     lattice = tuple(lattice if lattice is not None else LATTICES[family])
+    # static VMEM certification (DESIGN.md §15.3): a candidate the footprint
+    # model rejects is never timed — pruning happens BEFORE the sweep, and
+    # the prune count rides the summary line and the tuner counters
+    from repro.kernels import vmem as kvmem
+    src = omega if (family == "cg_matvec" and omega is not None) else st
+    kept, pruned = kvmem.prune_lattice(
+        family, lattice,
+        lambda t: kvmem.workload_geometry(family, src, factors, t, x=x))
+    if pruned:
+        obs.counter_add("tuner/vmem_pruned", len(pruned))
+        if not kept:
+            detail = "\n".join(e.format() for _, e in pruned)
+            raise ValueError(
+                f"every {family!r} lattice candidate exceeds the VMEM "
+                f"budget ({kvmem.vmem_budget_bytes()} B) — raise "
+                f"REPRO_VMEM_MB or add smaller tiles:\n{detail}")
+    lattice = tuple(kept)
     ir = _family_ir(family, st, factors)
     path = _FAMILY_PATH[family]
     cost = pcost.estimate(ir, path)
@@ -166,6 +183,7 @@ def tune_family(family: str, st, factors, omega=None, x=None,
     set_tile(family, winner)
     return {"tile": winner, "seconds": best,
             "timings": [(t.short(), s) for t, s in timings],
+            "vmem_pruned": [(t.short(), e.total) for t, e in pruned],
             "predicted": predicted}
 
 
@@ -187,8 +205,12 @@ def plan_signature(st, factors) -> str:
 
 def cache_key(family: str, st, factors,
               lattice_version: Optional[int] = None) -> str:
+    from repro.kernels.vmem import vmem_budget_bytes
     v = LATTICE_VERSION if lattice_version is None else lattice_version
-    return f"{device_kind()}|v{v}|{family}|{plan_signature(st, factors)}"
+    # the VMEM budget is part of key validity: a winner tuned under one
+    # budget may be a pruned (unrunnable) candidate under a smaller one
+    return (f"{device_kind()}|v{v}|{family}|{plan_signature(st, factors)}"
+            f"|vmem={vmem_budget_bytes()}")
 
 
 class PlanCacheFile:
@@ -259,8 +281,8 @@ def ensure_tuned(st, factors, omega=None, x=None,
     if x is None:
         x = factors[0]
     cache = PlanCacheFile(cache_path)
-    summary: Dict = {"hits": 0, "measured": 0, "winners": {},
-                     "cache_path": cache_path}
+    summary: Dict = {"hits": 0, "measured": 0, "vmem_pruned": 0,
+                     "winners": {}, "cache_path": cache_path}
     samples = []
     fresh = False
     for family in families:
@@ -277,6 +299,7 @@ def ensure_tuned(st, factors, omega=None, x=None,
         cache.put(key, result)
         fresh = True
         summary["measured"] += len(result["timings"])
+        summary["vmem_pruned"] += len(result["vmem_pruned"])
         summary["winners"][family] = result["tile"].short()
         p = result["predicted"]
         samples.append((p["flops"], p["mem"], result["seconds"]))

@@ -65,6 +65,19 @@ class ServeEngine:
                  score_path: Optional[str] = None,
                  foldin_lam: float = 1e-2,
                  foldin_matvec_path: Optional[str] = None):
+        # the engine gathers factor rows by GLOBAL index on every score and
+        # scans full factors for top-k: a device-sharded factor would
+        # resolve those indices against its local shard and return garbage.
+        # Refuse construction instead (ROADMAP: sharded-factor serving).
+        for d, f in enumerate(model.factors):
+            sh = getattr(f, "sharding", None)
+            if sh is not None and not getattr(sh, "is_fully_replicated",
+                                              True):
+                raise ValueError(
+                    f"ServeEngine requires fully replicated factors, but "
+                    f"factor {d} is sharded ({sh}); all-gather the factors "
+                    f"onto every device (or serve from a host copy) before "
+                    f"constructing the engine")
         self.model = model
         self.max_batch = int(max_batch)
         self.min_batch = int(min_batch)

@@ -1,0 +1,14 @@
+# Seeded-bug fixture for the collective-matching pass (exactly ONE planted
+# defect): a psum executed only on the branch of a device-varying Python
+# `if` — devices whose shard fails the test skip the rendezvous and the
+# psum deadlocks across processes. The analyzer must report SP101 and
+# nothing else (the axis name is threaded, so no SP103; no lax.cond, so no
+# SP102).
+import jax
+import jax.numpy as jnp
+
+
+def exchange(x, axis):
+    if jnp.any(x > 0):              # device-varying: each shard differs
+        x = jax.lax.psum(x, axis)   # BUG: only some devices rendezvous
+    return x

@@ -1,0 +1,25 @@
+# Seeded-bug fixture for the sharding-propagation pass (exactly ONE planted
+# defect): a data-sharded segment-sum with NO psum — each device returns
+# only its local rows' contribution, a partial-sum escape. The analyzer
+# must report SP001 and nothing else.
+import jax
+import jax.numpy as jnp
+
+AXIS_ENV = (("data", 2),)
+ARGS = (
+    jax.ShapeDtypeStruct((16,), jnp.float32),     # nonzero values (sharded)
+    jax.ShapeDtypeStruct((16,), jnp.int32),       # mode-0 rows (sharded)
+    jax.ShapeDtypeStruct((8, 4), jnp.float32),    # factor (replicated)
+)
+IN_STATES = (
+    {"data": ("shard", 0)},
+    {"data": ("shard", 0)},
+    {"data": ("rep",)},
+)
+EXPECTED = {"data": "rep"}   # an MTTKRP row block must be fully reduced
+
+
+def run(values, rows, factor):
+    contrib = values[:, None] * factor[rows]
+    out = jax.ops.segment_sum(contrib, rows, num_segments=8)
+    return out   # BUG: missing jax.lax.psum(out, "data")

@@ -1,0 +1,14 @@
+# Seeded-bug fixture for the VMEM certification pass (exactly ONE planted
+# defect): a cg_matvec tile whose resident factors (netflix-full mode-0
+# extent at rank 64) cannot fit a 16 MiB core. The analyzer must report
+# SP201 and nothing else.
+FAMILY = "cg_matvec"
+TILE = {"block_m": 1024, "block_r": 128}
+GEOMETRY = {
+    "nd": 3,
+    "rank": 64,
+    "factor_rows": (17_770, 2_182),   # resident non-target factors
+    "capacity": 4096,
+    "x_rows": 480_189,                # the CG direction spans mode 0
+}
+BUDGET_MB = 16

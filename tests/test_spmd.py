@@ -1,0 +1,419 @@
+"""SPMD collective-soundness analyzer (repro.analysis.spmd, DESIGN.md §15):
+replication-state transfer units, the seeded-bug fixture corpus (each must
+report exactly its planted rule), fault-injection tripwires over the planner
+sweep, the collective-matching AST lint, static VMEM certification, tuner
+pruning (a rejected candidate is NEVER timed — asserted on obs counters),
+the ``validate_spmd`` planner hook, the ServeEngine replication guard, and
+the JS006 stale-suppression detector."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.analysis import contracts
+from repro.analysis import lint
+from repro.analysis.spmd import cli as spmd_cli
+from repro.analysis.spmd import collectives
+from repro.analysis.spmd import sharding
+from repro.analysis.spmd import vmem as spmd_vmem
+from repro.analysis.spmd.sharding import (REP, ROWS, SpmdContractError,
+                                          analyze_fn, shard)
+from repro.core.sparse_tensor import SparseTensor
+from repro.kernels import tile as ktile
+from repro.kernels import vmem as kvmem
+from repro.kernels.tile import KernelTile
+from repro.planner import cost as pcost
+from repro.planner import tuner
+from repro.planner.plan import clear_plan_cache, plan_contraction
+from repro.serve.engine import ServeEngine
+from repro.serve.model import ServingModel
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXDIR = os.path.join(REPO_ROOT, "tests", "analysis_fixtures")
+
+ENV1 = (("data", 2),)
+V = (jax.ShapeDtypeStruct((8,), jnp.float32),)
+V_SHARDED = ({"data": shard(0)},)
+WANT_REP = {"data": "rep"}
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# replication-state transfer units (analyze_fn)
+# ---------------------------------------------------------------------------
+
+class TestTransfer:
+    def test_reduce_then_psum_is_clean(self):
+        def f(v):
+            return jax.lax.psum(jnp.sum(v), "data")
+        assert analyze_fn(f, V, V_SHARDED, ENV1, expected=WANT_REP) == []
+
+    def test_missing_psum_is_partial_sum_escape(self):
+        def f(v):
+            return jnp.sum(v)
+        fs = analyze_fn(f, V, V_SHARDED, ENV1, expected=WANT_REP)
+        assert rules_of(fs) == {"SP001"}
+
+    def test_double_psum_is_over_reduction(self):
+        def f(v):
+            return jax.lax.psum(jax.lax.psum(jnp.sum(v), "data"), "data")
+        fs = analyze_fn(f, V, V_SHARDED, ENV1, expected=WANT_REP)
+        assert "SP002" in rules_of(fs) and "SP001" not in rules_of(fs)
+
+    def test_wrong_axis_psum_flags_both_sides(self):
+        """psum over the WRONG mesh axis: the reduced axis stays a partial
+        sum (SP001) while the named axis gets a redundant psum (SP002)."""
+        env = (("data", 2), ("model", 2))
+        states = ({"data": shard(0), "model": REP},)
+
+        def f(v):
+            return jax.lax.psum(jnp.sum(v), "model")
+        fs = analyze_fn(f, V, states, env,
+                        expected={"data": "rep", "model": "rep"})
+        assert rules_of(fs) == {"SP001", "SP002"}
+
+    def test_sharded_escape_when_replication_expected(self):
+        def f(v):
+            return v * 2.0
+        fs = analyze_fn(f, V, V_SHARDED, ENV1, expected=WANT_REP)
+        assert rules_of(fs) == {"SP003"}
+
+    def test_all_gather_discharges_shard(self):
+        def f(v):
+            return jax.lax.all_gather(v, "data")
+        assert analyze_fn(f, V, V_SHARDED, ENV1, expected=WANT_REP) == []
+
+    def test_gather_into_rowsharded_factor_flags_sp004(self):
+        """Global row indexing into a ROWS-sharded factor without an
+        all_gather resolves against the local shard — SP004."""
+        args = (jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                jax.ShapeDtypeStruct((6,), jnp.int32))
+        states = ({"data": shard(0, ROWS)}, {"data": REP})
+
+        def f(factor, rows):
+            return jax.lax.psum(jnp.sum(factor[rows], axis=0), "data")
+        fs = analyze_fn(f, args, states, ENV1, expected=WANT_REP)
+        assert "SP004" in rules_of(fs)
+
+    def test_gather_into_local_nnz_shard_is_legal(self):
+        """The same gather into an UNTAGGED shard (owner-aligned nnz data,
+        e.g. a sort permutation) is a local move, not a finding."""
+        args = (jax.ShapeDtypeStruct((8,), jnp.float32),
+                jax.ShapeDtypeStruct((8,), jnp.int32))
+        states = ({"data": shard(0)}, {"data": shard(0)})
+
+        def f(vals, perm):
+            return vals[perm]
+        fs = analyze_fn(f, args, states, ENV1, expected={"data": "shard"})
+        assert fs == []
+
+    def test_untraceable_fn_is_sp000(self):
+        def f(v):
+            raise RuntimeError("boom")
+        fs = analyze_fn(f, V, V_SHARDED, ENV1)
+        assert rules_of(fs) == {"SP000"}
+
+
+# ---------------------------------------------------------------------------
+# the seeded-bug fixture corpus: exactly ONE planted defect each
+# ---------------------------------------------------------------------------
+
+class TestFixtures:
+    @pytest.mark.parametrize("fixture,planted", [
+        ("spmd_missing_psum.py", "SP001"),
+        ("spmd_branch_divergent.py", "SP101"),
+        ("spmd_over_vmem.py", "SP201"),
+    ])
+    def test_fixture_reports_exactly_its_planted_rule(self, fixture,
+                                                      planted):
+        fs = spmd_cli.check_fixture(os.path.join(FIXDIR, fixture))
+        assert rules_of(fs) == {planted}, \
+            f"{fixture}: {[f.format() for f in fs]}"
+
+    @pytest.mark.parametrize("fixture,planted", [
+        ("spmd_missing_psum.py", "SP001"),
+        ("spmd_branch_divergent.py", "SP101"),
+        ("spmd_over_vmem.py", "SP201"),
+    ])
+    def test_cli_expect_contract(self, fixture, planted):
+        path = os.path.join(FIXDIR, fixture)
+        assert spmd_cli.main(["--fixture", path, "--expect", planted]) == 0
+        assert spmd_cli.main(["--fixture", path, "--expect", "SP999"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# the planner-IR sweep + fault injection
+# ---------------------------------------------------------------------------
+
+class TestShardingSweep:
+    def test_order3_sweep_is_clean(self):
+        assert sharding.check_cases(orders=(3,)) == []
+
+    @pytest.mark.parametrize("fault,rule", [
+        ("missing-psum", "SP001"),
+        ("double-psum", "SP002"),
+    ])
+    def test_planted_fault_trips_the_sweep(self, fault, rule):
+        sub = [c for c in contracts.iter_cases((3,))
+               if c.axis_env and c.family in ("mttkrp", "tttp")]
+        sharding.set_fault(fault)
+        try:
+            fs = sharding.check_cases(cases=sub)
+        finally:
+            sharding.set_fault(None)
+        assert fs, f"fault {fault!r} produced no findings"
+        assert rule in rules_of(fs)
+
+    def test_certify_plan_distributed(self, monkeypatch):
+        monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+        case = next(c for c in contracts.iter_cases((3,))
+                    if c.axis_env and c.family == "mttkrp")
+        paths = pcost.candidate_paths(case.ir)
+        operands = [case.st, *case.denses]
+        sharding.certify_plan(case.ir, paths, operands, case.ctx,
+                              case.config)  # sound: no raise
+        sharding.set_fault("missing-psum")
+        try:
+            with pytest.raises(SpmdContractError, match="SP001"):
+                sharding.certify_plan(case.ir, paths, operands, case.ctx,
+                                      case.config)
+        finally:
+            sharding.set_fault(None)
+
+    def test_plan_contraction_validate_spmd_wiring(self):
+        st = SparseTensor.random(jax.random.PRNGKey(0), (12, 10, 8), 40,
+                                 cap=48)
+        factors = [np.linspace(-1, 1, d * 4, dtype=np.float32).reshape(d, 4)
+                   for d in st.shape]
+        clear_plan_cache()
+        plan = plan_contraction("ijk,jr,kr->ir", [st] + factors[1:],
+                                validate_spmd=True)
+        assert plan.path in pcost.candidate_paths(plan.ir)
+
+
+# ---------------------------------------------------------------------------
+# collective-matching AST lint
+# ---------------------------------------------------------------------------
+
+class TestCollectives:
+    PATH = "src/repro/core/x.py"
+
+    def test_branch_divergence_on_device_varying_test(self):
+        src = ("import jax\nimport jax.numpy as jnp\n\n"
+               "def exchange(x, axis):\n"
+               "    if jnp.any(x > 0):\n"
+               "        x = jax.lax.psum(x, axis)\n"
+               "    return x\n")
+        assert "SP101" in rules_of(collectives.lint_source(src, self.PATH))
+
+    def test_uniform_host_guard_is_legal(self):
+        """`if ctx.data is not None:` is the same on every device — a
+        collective under it is NOT divergent."""
+        src = ("import jax\n\n"
+               "def maybe(ctx, x, axis):\n"
+               "    if ctx.data is not None:\n"
+               "        x = jax.lax.psum(x, axis)\n"
+               "    return x\n")
+        fs = [f for f in collectives.lint_source(src, self.PATH)
+              if not f.suppressed]
+        assert fs == []
+
+    def test_collective_under_traced_conditional(self):
+        src = ("import jax\n\n"
+               "def pick(p, x, axis):\n"
+               "    return jax.lax.cond(p,\n"
+               "                        lambda v: jax.lax.psum(v, axis),\n"
+               "                        lambda v: v, x)\n")
+        assert "SP102" in rules_of(collectives.lint_source(src, self.PATH))
+
+    def test_hardcoded_axis_name(self):
+        src = ("import jax\n\n"
+               "def f(x):\n"
+               "    return jax.lax.psum(x, 'data')\n")
+        assert "SP103" in rules_of(collectives.lint_source(src, self.PATH))
+
+    def test_sp_suppression_with_reason_is_honored(self):
+        src = ("import jax\n\n"
+               "def f(x):\n"
+               "    # repro-lint: disable=SP103 -- single-mesh helper; "
+               "axis fixed by the launch contract\n"
+               "    return jax.lax.psum(x, 'data')\n")
+        fs = collectives.lint_source(src, self.PATH)
+        sp = [f for f in fs if f.rule == "SP103"]
+        assert sp and all(f.suppressed for f in sp)
+
+    def test_repo_is_collective_clean(self):
+        fs = [f for f in collectives.run(REPO_ROOT) if not f.suppressed]
+        assert fs == [], "\n".join(f.format() for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# static VMEM certification
+# ---------------------------------------------------------------------------
+
+class TestVmem:
+    GEOM = kvmem.KernelGeometry(nd=3, rank=32, factor_rows=(60, 20),
+                                capacity=4096)
+
+    def test_estimate_monotone_in_tile(self):
+        small = kvmem.estimate_vmem("tttp", KernelTile(block_m=256,
+                                                       block_r=32),
+                                    self.GEOM)
+        big = kvmem.estimate_vmem("tttp", KernelTile(block_m=512,
+                                                     block_r=64), self.GEOM)
+        assert small.fits and big.fits
+        assert big.total > small.total
+
+    def test_paper_scale_cg_overflows_16mib(self):
+        geom = kvmem.KernelGeometry(nd=3, rank=64,
+                                    factor_rows=(17_770, 2_182),
+                                    capacity=4096, x_rows=480_189)
+        est = kvmem.estimate_vmem("cg_matvec",
+                                  KernelTile(block_m=1024, block_r=128),
+                                  geom)
+        assert not est.fits and est.total > est.budget
+
+    def test_ci_lattices_all_fit(self):
+        assert spmd_vmem.run() == []
+
+    def test_paper_scale_findings_are_expected(self):
+        fs = spmd_vmem.run(paper_scale=True)
+        assert fs and rules_of(fs) == {"SP201"}
+
+
+# ---------------------------------------------------------------------------
+# tuner pruning: a VMEM-rejected candidate is NEVER timed
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def tuned_problem():
+    key = jax.random.PRNGKey(0)
+    st = SparseTensor.random(key, (24, 18, 12), 120, cap=140)
+    ks = jax.random.split(key, 3)
+    factors = [jax.random.normal(k, (d, 8)) for k, d in zip(ks, st.shape)]
+    yield st, factors
+    ktile.reset_tiles()
+    pcost.reset_rates()
+
+
+@pytest.fixture
+def registry():
+    obs.enable()
+    reg = obs.get_registry()
+    reg.reset()
+    yield reg
+    obs.disable()
+
+
+class TestTunerPruning:
+    def test_rejected_candidate_is_never_timed(self, tuned_problem,
+                                               registry, monkeypatch):
+        st, factors = tuned_problem
+        keep = KernelTile(block_r=8)
+        drop = KernelTile(block_r=128)
+        geom = kvmem.workload_geometry("tttp", st, factors, keep)
+        lo = kvmem.estimate_vmem("tttp", keep, geom).total
+        hi = kvmem.estimate_vmem("tttp", drop, geom).total
+        assert lo < hi
+        monkeypatch.setenv("REPRO_VMEM_MB", str((lo + hi) / 2 / 2 ** 20))
+        result = tuner.tune_family("tttp", st, factors,
+                                   lattice=(keep, drop), iters=1)
+        timed = [t for t, _ in result["timings"]]
+        assert drop.short() not in timed and timed == [keep.short()]
+        assert result["vmem_pruned"] == [(drop.short(), hi)]
+        assert registry.counters.get("tuner/vmem_pruned") == 1
+        assert registry.counters.get("tuner/measurements") == 1
+
+    def test_all_pruned_is_an_error(self, tuned_problem, registry,
+                                    monkeypatch):
+        st, factors = tuned_problem
+        monkeypatch.setenv("REPRO_VMEM_MB", "0.001")
+        with pytest.raises(ValueError, match="VMEM"):
+            tuner.tune_family("tttp", st, factors,
+                              lattice=(KernelTile(),), iters=1)
+
+    def test_cache_key_carries_vmem_budget(self, tuned_problem,
+                                           monkeypatch):
+        st, factors = tuned_problem
+        k16 = tuner.cache_key("tttp", st, factors)
+        monkeypatch.setenv("REPRO_VMEM_MB", "8")
+        k8 = tuner.cache_key("tttp", st, factors)
+        assert k16 != k8 and k8.endswith(f"|vmem={8 * 2 ** 20}")
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine replication guard
+# ---------------------------------------------------------------------------
+
+class _FakeSharding:
+    is_fully_replicated = False
+
+    def __repr__(self):
+        return "FakeSharding(mode=0)"
+
+
+class _FakeShardedFactor:
+    def __init__(self, rows, rank):
+        self.shape = (rows, rank)
+        self.sharding = _FakeSharding()
+
+
+class TestServeReplicationGuard:
+    def test_sharded_factor_is_refused_with_remedy(self):
+        model = ServingModel(factors=[_FakeShardedFactor(8, 4),
+                                      _FakeShardedFactor(6, 4),
+                                      _FakeShardedFactor(5, 4)])
+        with pytest.raises(ValueError, match="fully replicated"):
+            ServeEngine(model)
+        with pytest.raises(ValueError, match="all-gather"):
+            ServeEngine(model)
+
+    def test_replicated_factors_construct(self):
+        key = jax.random.PRNGKey(1)
+        factors = [jax.random.normal(k, (d, 4))
+                   for k, d in zip(jax.random.split(key, 3), (8, 6, 5))]
+        engine = ServeEngine(ServingModel(factors=list(factors)))
+        out = engine.score(np.zeros((3, 3), np.int32))
+        assert out.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# JS006: stale-suppression detection
+# ---------------------------------------------------------------------------
+
+class TestStaleSuppressions:
+    PATH = "src/repro/launch/x.py"   # scope: JS003 + JS005
+
+    def test_dead_suppression_is_flagged_advisory(self):
+        src = ("import time\nimport jax\n\n"
+               "def f(x):\n"
+               "    jax.block_until_ready(x)\n"
+               "    # repro-lint: disable=JS003 -- legacy reason\n"
+               "    t = time.perf_counter()\n"
+               "    return t\n")
+        fs = lint.lint_source(src, self.PATH)
+        js6 = [f for f in fs if f.rule == "JS006"]
+        assert len(js6) == 1 and js6[0].advisory
+        assert "legacy reason" in js6[0].message
+
+    def test_live_suppression_is_not_flagged(self):
+        src = ("import time\n\n"
+               "def f():\n"
+               "    # repro-lint: disable=JS003 -- host-only accounting\n"
+               "    t = time.perf_counter()\n"
+               "    return t\n")
+        fs = lint.lint_source(src, self.PATH)
+        assert not any(f.rule == "JS006" for f in fs)
+        assert any(f.rule == "JS003" and f.suppressed for f in fs)
+
+    def test_docstring_example_is_not_a_suppression(self):
+        src = ('"""Docs showing the idiom:\n\n'
+               "    # repro-lint: disable=JS003 -- why it is safe\n"
+               '"""\n')
+        assert lint.lint_source(src, self.PATH) == []
